@@ -1,0 +1,31 @@
+"""Paper Fig. 3: equal-power (b~x, R) curves — the deployment-time knob."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core import planner
+from repro.core import power as pw
+
+
+def run() -> dict:
+    t0 = time.perf_counter()
+    curves = {}
+    for bits in [2, 3, 4, 5, 6, 8]:
+        p = planner.budget_from_bits(bits)
+        curves[str(bits)] = {
+            "power_bitflips_per_mac": p,
+            "points": [{"b_x_tilde": b, "r": round(r, 3)}
+                       for b, r in planner.equal_power_curve(bits)],
+        }
+    save_json("fig3_equal_power.json", curves)
+    us = (time.perf_counter() - t0) * 1e6
+    four = curves["4"]["points"]
+    emit("fig3_equal_power", us,
+         f"4-bit budget {curves['4']['power_bitflips_per_mac']:.0f}: "
+         + " ".join(f"(b~x={p['b_x_tilde']} R={p['r']})" for p in four[:3]))
+    return curves
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Pallas kernel micro-bench (interpret mode on CPU — correctness-path
+timing; real perf comes from the TPU dry-run roofline)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, time_call
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 512, 256
+    x = jnp.abs(jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    packed = ops.pann_pack_weights(w, r=2.0)
+    out = {}
+
+    us = time_call(lambda: ops.pann_matmul(x, packed, act_bits=8,
+                                           interpret=True))
+    out["pann_matmul_fused"] = us
+    emit("kernel_pann_matmul_fused", us, f"{m}x{k}x{n} int8 bitplane")
+
+    us = time_call(lambda: ops.pann_matmul(x, packed, act_bits=8,
+                                           mode="planes", interpret=True))
+    out["pann_matmul_planes"] = us
+    emit("kernel_pann_matmul_planes", us, "literal Eq.10 dataflow")
+
+    x_q = jnp.asarray(rng.integers(0, 127, (m, k)), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    s_x = jnp.ones((m, 1), jnp.float32)
+    s_w = jnp.ones((n,), jnp.float32)
+    us = time_call(lambda: ops.unsigned_matmul(x_q, w_q, s_x, s_w,
+                                               interpret=True))
+    out["unsigned_matmul"] = us
+    emit("kernel_unsigned_matmul", us, "Sec.4 split, int32 accum")
+
+    us = time_call(lambda: ops.quantize_act(x, bits=8, interpret=True))
+    out["quantize_act"] = us
+    emit("kernel_quantize_act", us, "per-row scale + round + clip")
+
+    us = time_call(lambda: ref.quantize_act_ref(x, 8))
+    out["quantize_act_ref"] = us
+    emit("kernel_quantize_act_ref", us, "jnp oracle")
+
+    from repro.kernels.pann_matmul_packed import (pack_planes,
+                                                  pann_matmul_packed)
+    pp = pack_planes(packed["planes_pos"])
+    pn = pack_planes(packed["planes_neg"])
+    x_q = jnp.asarray(rng.integers(0, 128, (m, k)), jnp.int8)
+    s_x = jnp.ones((m, 1), jnp.float32)
+    us = time_call(lambda: pann_matmul_packed(
+        x_q, pp, pn, s_x, packed["gamma"], interpret=True))
+    out["pann_matmul_packed"] = us
+    emit("kernel_pann_matmul_packed", us,
+         f"{packed['n_planes']} planes at 1 bit/weight HBM")
+    save_json("kernel_bench.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Baseline-vs-optimized roofline comparison across all single-pod cells,
+from dryrun_both.json (baseline) and optimized/dryrun_single.json."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+from benchmarks.roofline import analyze_record
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+MARK = "<!-- OPTIMIZED_TABLE -->"
+
+
+def load(path):
+    with open(os.path.join(RESULTS_DIR, path)) as f:
+        data = json.load(f)
+    out = {}
+    for r in data["records"]:
+        if r.get("mesh") != "single" or r.get("skipped"):
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in out:
+            out[key] = analyze_record(r)
+    return out
+
+
+def main() -> None:
+    base = load("dryrun_both.json")
+    opt = load("optimized/dryrun_single.json")
+    lines = [
+        "| arch | shape | bound term (base → opt) | useful (base → opt) |",
+        "|---|---|---|---|",
+    ]
+    improved = 0
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        tb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        to = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        mark = ""
+        if to < 0.95 * tb or o["useful_ratio"] > 1.05 * b["useful_ratio"]:
+            improved += 1
+            mark = " ✓"
+        lines.append(
+            f"| {key[0]} | {key[1]} | {tb:.3e} → {to:.3e}{mark} | "
+            f"{b['useful_ratio']:.2f} → {o['useful_ratio']:.2f} |")
+    table = "\n".join(lines)
+    print(f"{improved}/{len(opt)} cells improved")
+    with open(EXP) as f:
+        text = f.read()
+    if MARK in text:
+        text = text.replace(MARK, table)
+        with open(EXP, "w") as f:
+            f.write(text)
+        print("injected optimized table into EXPERIMENTS.md")
+    else:
+        print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""§Perf hillclimb driver: lower+compile the three chosen cells in baseline
+and optimized variants, record before/after roofline terms.
+
+Run as its own process (the dryrun import sets the 512-device XLA flag):
+
+    PYTHONPATH=src:. python -m benchmarks.perf_iterations
+"""
+from repro.launch import dryrun as DR  # noqa: E402  (sets XLA_FLAGS first)
+
+import json  # noqa: E402
+import os  # noqa: E402
+
+from benchmarks.roofline import analyze_record  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def cell(tag, arch, shape, **kw):
+    rec = DR.run_cell(arch, shape, multi_pod=False, **kw)
+    rec["tag"] = tag
+    a = analyze_record(rec)
+    a["tag"] = tag
+    print(f"[perf] {tag}: compute {a['t_compute_s']:.3e}s "
+          f"memory {a['t_memory_s']:.3e}s coll {a['t_collective_s']:.3e}s "
+          f"useful {a['useful_ratio']:.3f}")
+    return {"record": rec, "analysis": a}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    jobs = [
+        # Iteration 3: MoE dense-scan -> capacity dispatch (dbrx + mixtral)
+        ("dbrx_train_capacity", "dbrx-132b", "train_4k",
+         {"extra_parallel": {"moe_impl": "capacity"}}),
+        ("mixtral_train_capacity", "mixtral-8x7b", "train_4k",
+         {"extra_parallel": {"moe_impl": "capacity"}}),
+        # Iteration 4: masked cache update + sequence-parallel decode attn
+        ("llama3_decode_seqpar", "llama3-8b", "decode_32k", {}),
+        # Iteration 5: PANN int8 serving weights (on top of iter. 4)
+        ("llama3_decode_pann_serve", "llama3-8b", "decode_32k",
+         {"quant_mode": "pann_serve"}),
+        # Iteration 7: fp8 KV cache (+ both above)
+        ("llama3_decode_fp8cache", "llama3-8b", "decode_32k",
+         {"extra_parallel": {"kv_cache_dtype": "float8_e4m3fn"}}),
+        ("llama3_decode_pann_fp8", "llama3-8b", "decode_32k",
+         {"quant_mode": "pann_serve",
+          "extra_parallel": {"kv_cache_dtype": "float8_e4m3fn"}}),
+        # long-context serving: fp8 cache on the gemma2 long_500k cell
+        ("gemma2_long500k_fp8", "gemma2-9b", "long_500k",
+         {"extra_parallel": {"kv_cache_dtype": "float8_e4m3fn"}}),
+    ]
+    keep = set(args.only.split(",")) if args.only else None
+    out = []
+    for tag, arch, shape, kw in jobs:
+        if keep and tag not in keep:
+            continue
+        try:
+            out.append(cell(tag, arch, shape, **kw))
+        except Exception as e:  # noqa: BLE001
+            print(f"[perf][FAIL] {tag}: {e!r}")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "perf_iterations.json")
+    if os.path.exists(path) and keep:
+        with open(path) as f:
+            prev = json.load(f)
+        prev = [p for p in prev if p["analysis"]["tag"] not in keep]
+        out = prev + out
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[perf] wrote {len(out)} variant records")
+
+
+if __name__ == "__main__":
+    main()

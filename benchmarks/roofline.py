@@ -1,0 +1,116 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s ICI per link)
+
+HLO_FLOPs/bytes are the probe-corrected per-device values x chips (XLA's
+cost_analysis counts while-loop bodies once; the dry-run probes fold trip
+counts back in — see launch/dryrun.py). MODEL_FLOPS = 6·N·D (train) /
+2·N·D (inference) with N the MoE-active parameter count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def analyze_record(r: dict) -> dict | None:
+    if r.get("skipped"):
+        return {"arch": r["arch"], "shape": r["shape"],
+                "skipped": r["skipped"]}
+    n = r["n_devices"]
+    # probe extrapolation can go slightly negative on near-zero terms
+    flops_dev = max(r.get("flops_per_device_corrected",
+                          r.get("flops_per_device", 0.0)), 0.0)
+    bytes_dev = max(r.get("bytes_per_device_corrected",
+                          r.get("bytes_per_device", 0.0)), 0.0)
+    coll_dev = max(r.get("collective_bytes_corrected",
+                         (r.get("collective_bytes_per_device") or {})
+                         .get("total", 0.0)), 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = r.get("model_flops_global", 0.0)
+    hlo_global = flops_dev * n
+    out = {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "quant": r.get("quant", "none"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        # roofline fraction: the useful fraction of the bound set by the
+        # dominant term (what fraction of ideal-compute time the step needs)
+        "roofline_fraction": (model_flops / PEAK_FLOPS / n)
+        / max(max(terms.values()), 1e-30),
+    }
+    return out
+
+
+def run(paths=("dryrun_both.json", "dryrun_single.json")) -> list:
+    t0 = time.perf_counter()
+    rows, seen = [], set()
+    for p in paths:
+        full = os.path.join(RESULTS_DIR, p)
+        if not os.path.exists(full):
+            continue
+        with open(full) as f:
+            data = json.load(f)
+        for r in data.get("records", []):
+            if r.get("mesh") == "multi":
+                continue
+            key = (r["arch"], r["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            a = analyze_record(r)
+            if a:
+                rows.append(a)
+    save_json("roofline.json", rows)
+    us = (time.perf_counter() - t0) * 1e6
+    live = [r for r in rows if "skipped" not in r]
+    if live:
+        worst = min(live, key=lambda r: r["roofline_fraction"])
+        emit("roofline", us,
+             f"{len(live)} cells; worst fraction "
+             f"{worst['roofline_fraction']:.3f} ({worst['arch']} x "
+             f"{worst['shape']})")
+    else:
+        emit("roofline", us, "no dry-run records yet — run launch/dryrun")
+    return rows
+
+
+def markdown_table(rows: list) -> str:
+    live = [r for r in rows if "skipped" not in r]
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(live, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    skipped = [r for r in rows if "skipped" in r]
+    for r in skipped:
+        lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                     f"{r['skipped']} | — | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines and writes JSON artifacts to
+benchmarks/results/.  ``--fast`` shortens the trained-model benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps for the accuracy tables")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    steps = 80 if args.fast else 250
+    qat_steps = 60 if args.fast else 200
+
+    from benchmarks import (arch_power, fig3_equal_power, fig4_mse_ratio,
+                            kernel_bench, roofline, table1_bitflips,
+                            table2_ptq, table3_qat, table4_addition_factor,
+                            table6_accumulator, table14_footprint)
+
+    jobs = [
+        ("table1_bitflips", table1_bitflips.run, {}),
+        ("fig3_equal_power", fig3_equal_power.run, {}),
+        ("fig4_mse_ratio", fig4_mse_ratio.run, {}),
+        ("table6_accumulator", table6_accumulator.run, {}),
+        ("arch_power", arch_power.run, {}),
+        ("kernel_bench", kernel_bench.run, {}),
+        ("table2_ptq", table2_ptq.run, {"steps": steps}),
+        ("table3_qat", table3_qat.run, {"steps": qat_steps}),
+        ("table4_addition_factor", table4_addition_factor.run,
+         {"steps": qat_steps}),
+        ("table14_footprint", table14_footprint.run,
+         {"steps": max(qat_steps, 100)}),
+        ("roofline", roofline.run, {}),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        jobs = [j for j in jobs if j[0] in keep]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn, kw in jobs:
+        try:
+            fn(**kw)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

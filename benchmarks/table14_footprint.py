@@ -1,0 +1,59 @@
+"""Paper Tables 14-15 analogue: PANN runtime memory footprint and latency.
+
+For each power budget (expressed as a b-bit unsigned MAC): the optimal
+(b~x, R) plan, the measured per-neuron addition factor and weight-storage
+bits b_R on real (trained) weights, and the derived activation/weight memory
+and latency factors relative to the b-bit baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, train_small_lm
+from repro.core import pann as pann_core
+from repro.core import planner
+
+
+def run(steps: int = 120) -> dict:
+    t0 = time.perf_counter()
+    tl = train_small_lm(steps=steps)
+
+    # collect all 2-D projection weights of the trained model
+    weights = [l for p, l in
+               jax.tree_util.tree_flatten_with_path(tl.params)[0]
+               if getattr(p[-1], "key", "") == "w" and l.ndim == 2]
+
+    rows = []
+    for bits in [2, 3, 4, 5, 6, 8]:
+        budget = planner.budget_from_bits(bits)
+        plan = planner.plan_with_theory(budget)
+        b_rs, add_factors = [], []
+        for w in weights:
+            w_q, _ = pann_core.pann_quantize(w, plan.r, axis=0)
+            b_rs.append(pann_core.weight_storage_bits(w_q))
+            add_factors.append(float(
+                pann_core.additions_per_element(w_q).mean()))
+        b_r = int(np.max(b_rs))
+        rows.append({
+            "power_bits": bits,
+            "b_x_tilde": plan.b_x_tilde,
+            "latency_R": round(plan.r, 2),
+            "realized_additions": round(float(np.mean(add_factors)), 2),
+            "b_R_weight_bits": b_r,
+            "act_mem_factor": round(plan.b_x_tilde / bits, 2),
+            "weight_mem_factor": round(b_r / bits, 2),
+        })
+    save_json("table14_footprint.json", rows)
+    us = (time.perf_counter() - t0) * 1e6
+    r2 = rows[0]
+    emit("table14_footprint", us,
+         f"2-bit budget: b~x={r2['b_x_tilde']} R={r2['latency_R']} "
+         f"b_R={r2['b_R_weight_bits']} act-mem x{r2['act_mem_factor']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

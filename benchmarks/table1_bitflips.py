@@ -1,0 +1,62 @@
+"""Paper Table 1 + Figs. 8-11: bit flips per MAC, simulated vs the analytic
+model, for signed/unsigned and mixed-width multipliers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import bitflip as bf
+from repro.core import power as pw
+
+N = 30_000
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    rows = []
+    for b in range(2, 9):
+        ws, xs = (bf.draw_uniform_signed(rng, b, N) for _ in range(2))
+        wu, xu = (bf.draw_uniform_unsigned(rng, b, N) for _ in range(2))
+        mult_s = bf.simulate_multiplier(ws, xs, b, b, kind="booth")
+        mult_u = bf.simulate_multiplier(wu, xu, b, b, kind="booth")
+        acc_s = bf.simulate_accumulator(ws * xs, 32)
+        acc_u = bf.simulate_accumulator(wu * xu, 32)
+        rows.append({
+            "b": b,
+            "mult_signed_sim": round(mult_s.total, 2),
+            "mult_model": pw.p_mult_signed(b),
+            "acc_signed_sim": round(acc_s.total, 2),
+            "acc_signed_model": pw.p_acc_signed(b, 32),
+            "acc_unsigned_sim": round(acc_u.total, 2),
+            "acc_unsigned_model": pw.p_acc_unsigned(b),
+            "unsigned_ratio_mult": round(mult_u.internal_toggles
+                                         / max(mult_s.internal_toggles, 1e-9),
+                                         3),
+        })
+    # Observation 2: mixed widths, b_x = 8
+    mixed = []
+    x8s = bf.draw_uniform_signed(rng, 8, N)
+    x8u = bf.draw_uniform_unsigned(rng, 8, N)
+    for b_w in [8, 6, 4, 2]:
+        s = bf.simulate_multiplier(bf.draw_uniform_signed(rng, b_w, N), x8s,
+                                   b_w, 8).internal_toggles
+        u = bf.simulate_multiplier(bf.draw_uniform_unsigned(rng, b_w, N), x8u,
+                                   b_w, 8, kind="serial").internal_toggles
+        mixed.append({"b_w": b_w, "signed_internal": round(s, 2),
+                      "unsigned_internal_serial": round(u, 2),
+                      "model_eq7": pw.p_mult_mixed(b_w, 8) - 0.5 * (b_w + 8)})
+    out = {"table1": rows, "observation2_mixed": mixed}
+    save_json("table1_bitflips.json", out)
+    us = (time.perf_counter() - t0) * 1e6
+    b4 = rows[2]
+    emit("table1_bitflips", us,
+         f"b=4 MAC signed sim {b4['mult_signed_sim'] + b4['acc_signed_sim']:.1f}"
+         f" vs model {pw.p_mac_signed(4):.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

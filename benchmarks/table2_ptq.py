@@ -1,0 +1,62 @@
+"""Paper Table 2 (and Tables 7-9) analogue: post-training quantization at
+matched power budgets.
+
+Protocol (faithful to the paper, on our stand-in task):
+  1. train a small LM in full precision,
+  2. baselines: RUQ at b bits (weights AND activations, per the paper),
+  3. PANN: remove the multiplier, choose (b~x, R) with Algorithm 1 at the
+     SAME power budget (the b-bit unsigned-MAC cost),
+  4. report next-token accuracy per power row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import emit, eval_accuracy, save_json, train_small_lm
+from repro.configs.base import QuantConfig
+from repro.core import planner
+from repro.core import power as pw
+from repro.core import costs
+
+
+def run(steps: int = 250) -> dict:
+    t0 = time.perf_counter()
+    tl = train_small_lm(steps=steps)
+    fp_acc = eval_accuracy(tl, QuantConfig(mode="none"))
+    macs = costs.network_macs(tl.cfg, type("S", (), {
+        "seq_len": 64, "global_batch": 16, "kind": "train"})()).total
+
+    rows = []
+    for bits in [8, 6, 5, 4, 3, 2]:
+        budget = planner.budget_from_bits(bits)
+        base = eval_accuracy(tl, QuantConfig(mode="ruq_unsigned",
+                                             weight_bits=bits,
+                                             act_bits=bits))
+
+        def eval_fn(b_x, r):
+            return eval_accuracy(tl, QuantConfig(mode="pann", r=r,
+                                                 act_bits_tilde=b_x))
+
+        plan = planner.plan_with_eval(budget, eval_fn)
+        rows.append({
+            "bits": bits,
+            "power_bitflips_per_mac": round(budget, 1),
+            "network_giga_bitflips": round(budget * macs / 1e9, 2),
+            "baseline_ruq_acc": round(base, 4),
+            "pann_acc": round(plan.score, 4),
+            "pann_bx_tilde": plan.b_x_tilde,
+            "pann_r": round(plan.r, 2),
+        })
+    out = {"fp_accuracy": round(fp_acc, 4), "rows": rows}
+    save_json("table2_ptq.json", out)
+    us = (time.perf_counter() - t0) * 1e6
+    two = rows[-1]
+    emit("table2_ptq", us,
+         f"fp {fp_acc:.3f}; 2-bit budget: RUQ {two['baseline_ruq_acc']:.3f} "
+         f"vs PANN {two['pann_acc']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

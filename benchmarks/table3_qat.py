@@ -1,0 +1,45 @@
+"""Paper Table 3 / Table 10 analogue: quantization-aware training.
+
+LSQ-style RUQ QAT (STE fake-quant in the train step) vs PANN QAT at the same
+power budget, at 2/3/4-bit budgets.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, eval_accuracy, save_json, train_small_lm
+from repro.configs.base import QuantConfig
+from repro.core import planner
+
+
+def run(steps: int = 200) -> dict:
+    t0 = time.perf_counter()
+    rows = []
+    for bits in [4, 3, 2]:
+        budget = planner.budget_from_bits(bits)
+        plan = planner.plan_with_theory(budget)
+        qat_ruq = QuantConfig(mode="ruq_unsigned", weight_bits=bits,
+                              act_bits=bits, qat=True)
+        qat_pann = QuantConfig(mode="pann", r=plan.r,
+                               act_bits_tilde=plan.b_x_tilde, qat=True)
+        tl_ruq = train_small_lm(steps=steps, qat_quant=qat_ruq)
+        tl_pann = train_small_lm(steps=steps, qat_quant=qat_pann)
+        rows.append({
+            "bits": bits,
+            "power_bitflips_per_mac": round(budget, 1),
+            "lsq_style_ruq_acc": round(eval_accuracy(tl_ruq, qat_ruq), 4),
+            "pann_acc": round(eval_accuracy(tl_pann, qat_pann), 4),
+            "pann_bx_tilde": plan.b_x_tilde,
+            "pann_r": round(plan.r, 2),
+        })
+    save_json("table3_qat.json", rows)
+    us = (time.perf_counter() - t0) * 1e6
+    two = rows[-1]
+    emit("table3_qat", us,
+         f"2-bit QAT: RUQ {two['lsq_style_ruq_acc']:.3f} vs "
+         f"PANN {two['pann_acc']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Table 4 / 11-12 analogue: multiplier-free comparison by addition
+factor — PANN at R in {1, 1.5, 2} across weight/act bit widths (QAT)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, eval_accuracy, save_json, train_small_lm
+from repro.configs.base import QuantConfig
+
+
+def run(steps: int = 200) -> dict:
+    t0 = time.perf_counter()
+    rows = []
+    for r in [1.0, 1.5, 2.0]:
+        row = {"addition_factor": r}
+        for bits in [6, 4, 3]:
+            qc = QuantConfig(mode="pann", r=r, act_bits_tilde=bits, qat=True)
+            tl = train_small_lm(steps=steps, qat_quant=qc)
+            row[f"acc_{bits}b"] = round(eval_accuracy(tl, qc), 4)
+        rows.append(row)
+    save_json("table4_addition_factor.json", rows)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("table4_addition_factor", us,
+         " ".join(f"R={r['addition_factor']}:{r['acc_4b']:.3f}@4b"
+                  for r in rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

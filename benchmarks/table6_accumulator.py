@@ -1,0 +1,32 @@
+"""Paper Table 6 + Fig. 12(a): required accumulator widths and the unsigned
+power saving at both reduced-B and 32-bit accumulators."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core import power as pw
+
+
+def run() -> dict:
+    t0 = time.perf_counter()
+    rows = []
+    fan_in = 9 * 512    # the paper's ResNet largest layer (3x3x512)
+    for b in [2, 3, 4, 5, 6]:
+        breq = pw.required_acc_bits(b, b, fan_in)
+        rows.append({
+            "bits": b,
+            "required_acc_bits": breq,
+            "save_reduced_acc": round(pw.unsigned_power_save(b, breq), 3),
+            "save_32b_acc": round(pw.unsigned_power_save(b, 32), 3),
+        })
+    save_json("table6_accumulator.json", rows)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("table6_accumulator", us,
+         " ".join(f"{r['bits']}b:B={r['required_acc_bits']}"
+                  f" save32={r['save_32b_acc']:.0%}" for r in rows[:3]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

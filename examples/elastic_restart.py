@@ -1,0 +1,39 @@
+"""Fault-tolerance demo: train, crash mid-run, restart from the newest
+committed checkpoint, finish — and verify the result equals an uninterrupted
+run bit-for-bit (deterministic replayable data + saved optimizer state).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.launch import train  # noqa: E402
+
+
+def main():
+    base = tempfile.mkdtemp(prefix="repro_elastic_")
+    args = ["--arch", "llama3-8b", "--reduced", "--batch", "4",
+            "--seq", "32", "--lr", "1e-3", "--ckpt_every", "10",
+            "--total_steps", "30"]
+
+    print("== uninterrupted 30-step run ==")
+    full = train.main(args + ["--steps", "30", "--ckpt_dir", f"{base}/a"])
+
+    print("\n== run to step 10, 'crash', restart, finish ==")
+    train.main(args + ["--steps", "10", "--ckpt_dir", f"{base}/b"])
+    print("-- simulated node failure; restarting from checkpoint --")
+    resumed = train.main(args + ["--steps", "30", "--ckpt_dir", f"{base}/b"])
+
+    drift = abs(resumed["last_loss"] - full["last_loss"])
+    print(f"\nfinal losses: uninterrupted {full['last_loss']:.6f} vs "
+          f"resumed {resumed['last_loss']:.6f} (drift {drift:.2e})")
+    assert drift < 1e-5, "resume drifted!"
+    print("checkpoint/restart is exact — no training state was lost.")
+    shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Deployment-time power planning (Algorithm 1 + the Fig. 3 trade-off) for
+the assigned architectures — no training required.
+
+    PYTHONPATH=src python examples/power_planner.py --arch dbrx-132b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs  # noqa: E402
+from repro.core import costs, planner  # noqa: E402
+from repro.core import power as pw  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+    cfg = configs.get_config(args.arch)
+    shape = configs.SHAPES_BY_NAME["train_4k"]
+    macs = costs.network_macs(cfg, shape).scale(
+        1.0 / (shape.seq_len * shape.global_batch))
+
+    print(f"{cfg.name}: {costs.param_count(cfg)/1e9:.1f}B params "
+          f"({costs.param_count(cfg, active_only=True)/1e9:.1f}B active), "
+          f"{macs.total:.3e} MACs/token\n")
+    print("power/token under each scheme (Giga bit-flips), and the PANN "
+          "plan at each budget:")
+    print(f"{'bits':>4} {'signed':>9} {'unsigned':>9} {'PANN plan':>24}")
+    for bits in [8, 6, 5, 4, 3, 2]:
+        signed = pw.giga(pw.network_power_bitflips(macs, scheme="signed",
+                                                   bits=bits))
+        unsig = pw.giga(pw.network_power_bitflips(macs, scheme="unsigned",
+                                                  bits=bits))
+        plan = planner.plan_with_theory(planner.budget_from_bits(bits))
+        print(f"{bits:>4} {signed:>9.2f} {unsig:>9.2f} "
+              f"{'b~x=' + str(plan.b_x_tilde) + ' R=' + format(plan.r, '.2f'):>24}")
+    print("\n(moving between rows needs NO hardware change with PANN — "
+          "only (b~x, R); a regular quantizer needs a different multiplier)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: PANN (power-aware neural networks) as a production JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,14 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — cross-attention image layers every 5th layer. The vision
+tower is a STUB: input_specs() provides precomputed patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision family; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=28672, vocab_size=128256,
+        norm="rmsnorm", activation="swiglu", rope_theta=500000.0,
+        cross_attn_period=5, num_image_tokens=1600)

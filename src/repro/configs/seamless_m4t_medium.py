@@ -1,0 +1,14 @@
+"""seamless-m4t-medium [audio]: enc-dec transformer BACKBONE, 12+12L
+d_model=1024 16H (kv=16) d_ff=4096 vocab=256206. The speech/text modality
+frontend is a STUB: input_specs() provides precomputed frame embeddings.
+[arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium", family="encdec",
+        num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16,
+        d_ff=4096, vocab_size=256206,
+        norm="layernorm", activation="relu",
+        encoder_layers=12, encoder_seq_len=1024)

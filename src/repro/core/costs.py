@@ -1,0 +1,129 @@
+"""Analytic parameter / FLOP / MAC counting per architecture config.
+
+Used for (a) the paper-style power accounting (MACs x bit-flips/MAC), and
+(b) the roofline's MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) yardstick
+against compiled HLO FLOPs.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.power import MacBreakdown
+from repro.models.transformer import group_layout
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    n = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+        + cfg.num_heads * hd * d
+    if cfg.qkv_bias:
+        n += (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+    return n
+
+
+def _mlp_params(cfg: ModelConfig) -> int:
+    mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    return mult * cfg.d_model * cfg.d_ff
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    proj_out = 2 * d_inner + 2 * n + h
+    return cfg.d_model * proj_out + d_inner * cfg.d_model \
+        + cfg.ssm_conv_width * (d_inner + 2 * n)
+
+
+def _rwkv_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    return 5 * d * d + d * 64 + 64 * d + 2 * d * cfg.d_ff
+
+
+def _layer_params(cfg: ModelConfig, kind: str) -> int:
+    if kind == "attn":
+        return _attn_params(cfg) + _mlp_params(cfg)
+    if kind == "attn_moe":
+        e = cfg.moe.num_experts
+        return _attn_params(cfg) + e * _mlp_params(cfg) \
+            + cfg.d_model * e
+    if kind == "cross_attn":
+        return 2 * _attn_params(cfg) + _mlp_params(cfg)
+    if kind == "mamba":
+        return _ssm_params(cfg)
+    if kind == "mamba_attn":
+        return _ssm_params(cfg)  # shared block counted once, separately
+    if kind == "rwkv":
+        return _rwkv_params(cfg)
+    raise ValueError(kind)
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Total (or MoE-active) parameter count."""
+    pattern, n_groups, n_tail = group_layout(cfg)
+    total = cfg.padded_vocab * cfg.d_model          # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.padded_vocab     # lm head
+    seq = [s.kind for s in pattern] * n_groups \
+        + [pattern[i].kind for i in range(n_tail)]
+    for kind in seq:
+        if active_only and kind == "attn_moe":
+            k = cfg.moe.top_k
+            total += _attn_params(cfg) + k * _mlp_params(cfg) \
+                + cfg.d_model * cfg.moe.num_experts
+        else:
+            total += _layer_params(cfg, kind)
+    if cfg.family == "hybrid":
+        total += _attn_params(cfg) + _mlp_params(cfg)   # shared block
+    if cfg.family == "encdec":
+        total += cfg.encoder_layers * (_attn_params(cfg) + _mlp_params(cfg))
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The roofline yardstick: 6·N·D train / 2·N·D inference, with N the
+    MoE-*active* parameter count (the assignment's §Roofline definition)."""
+    n = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# MAC counting for the power model (forward pass, per token)
+# ---------------------------------------------------------------------------
+
+def macs_per_token(cfg: ModelConfig, context_len: int = 4096) -> MacBreakdown:
+    """Weight-MACs vs activation-MACs of one forward token.
+
+    act_macs covers QK^T and attention·V (context_len keys) — products with
+    no static weight operand, outside PANN's scope (DESIGN.md §4).
+    """
+    weight = float(param_count(cfg, active_only=True))
+    # embedding lookups are gathers, not MACs
+    weight -= cfg.padded_vocab * cfg.d_model
+    pattern, n_groups, n_tail = group_layout(cfg)
+    seq = [s.kind for s in pattern] * n_groups \
+        + [pattern[i].kind for i in range(n_tail)]
+    hd = cfg.resolved_head_dim
+    act = 0.0
+    for i, kind in enumerate(seq):
+        if kind in ("attn", "attn_moe", "cross_attn"):
+            win = pattern[i % len(pattern)].window
+            ctx = min(context_len, win) if win else context_len
+            act += 2.0 * cfg.num_heads * hd * ctx   # QK^T + PV
+        if kind == "mamba_attn":
+            act += 2.0 * cfg.num_heads * hd * context_len
+    return MacBreakdown(weight_macs=weight, act_macs=act)
+
+
+def network_macs(cfg: ModelConfig, shape: ShapeConfig) -> MacBreakdown:
+    tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
+        else shape.global_batch
+    ctx = shape.seq_len
+    return macs_per_token(cfg, ctx).scale(float(tokens))

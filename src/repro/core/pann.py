@@ -1,0 +1,187 @@
+"""Section 5: PANN — power-aware weight quantization + multiplier removal.
+
+Weights are quantized with step gamma_w = ||w||_1 / (R d) (Eq. 12) so that the
+*average number of additions per input element* equals the budget R; each
+product Q_w(w) * Q_x(x) is then realizable as Q_w(w) repeated additions
+(Eq. 10), i.e. no multiplier is needed.
+
+TPU adaptation (see DESIGN.md §2): after the Sec.-4 unsigned split, the
+non-negative integer weights need only b_R = ceil(log2(max w_q + 1)) bits, so
+we decompose them into binary bit-planes
+
+    w_q = sum_k 2^k B_k,   B_k in {0,1}
+    w_q^T x = sum_k 2^k (B_k^T x)
+
+and every plane-product B_k^T x is a pure addition network. This is exactly
+Eq. (10) restructured for a systolic array and is bit-for-bit identical to the
+repeated-addition semantics. ``repro.kernels.pann_matmul`` implements it as a
+Pallas kernel; this module holds the model-level (jnp) definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.unsigned import unsigned_split
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (Eq. 12)
+# ---------------------------------------------------------------------------
+
+def pann_gamma(w: Array, r: float, axis=None, eps: float = 1e-12) -> Array:
+    """gamma_w = ||w||_1 / (R d), per-tensor (axis=None) or per-axis.
+
+    ``axis`` indicates the *reduction* (fan-in) dimensions — the d in Eq. (12).
+    Per-output-channel quantization (Table 14 measures per-neuron addition
+    factors) passes the fan-in axis here.
+    """
+    dims = quant._reduce_dims(w, axis)
+    d = 1
+    for a in dims:
+        d *= w.shape[a]
+    l1 = jnp.sum(jnp.abs(w), axis=dims, keepdims=True)
+    return jnp.maximum(l1, eps) / (r * d)
+
+
+def pann_quantize(w: Array, r: float, axis=None) -> Tuple[Array, Array]:
+    """Eq. (12): Q(w) = round(w / gamma_w). Returns (signed int codes, gamma).
+
+    Codes are float-typed integers (exact for |code| < 2^24 in fp32).
+    """
+    gamma = pann_gamma(w, r, axis)
+    return jnp.round(w / gamma), gamma
+
+
+def pann_fake_quant(w: Array, r: float, axis=None) -> Array:
+    """STE fake-quant with the PANN step — used for QAT."""
+    q, gamma = pann_quantize(w, r, axis)
+    wq = q * gamma
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def additions_per_element(w_q: Array, axis=None) -> Array:
+    """||w_q||_1 / d — the realized addition factor (should be ~R)."""
+    dims = quant._reduce_dims(w_q, axis)
+    d = 1
+    for a in dims:
+        d *= w_q.shape[a]
+    return jnp.sum(jnp.abs(w_q), axis=dims) / d
+
+
+def weight_storage_bits(w_q: Array) -> int:
+    """b_R: bits needed to store |w_q| after the unsigned split (Table 14)."""
+    m = int(jnp.max(jnp.abs(w_q)))
+    return max(int(jnp.ceil(jnp.log2(m + 1))), 1) if m > 0 else 1
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane decomposition (TPU-native Eq. 10)
+# ---------------------------------------------------------------------------
+
+def bitplane_decompose(w_q_nonneg: Array, n_planes: Optional[int] = None
+                       ) -> Array:
+    """Non-negative integer weights -> stacked binary planes.
+
+    Returns planes of shape (n_planes, *w.shape), plane k holding bit k, so
+    that w_q = sum_k 2^k planes[k].
+    """
+    wi = w_q_nonneg.astype(jnp.int32)
+    if n_planes is None:
+        n_planes = int(weight_storage_bits(w_q_nonneg))
+    ks = jnp.arange(n_planes, dtype=jnp.int32)
+    planes = (wi[None, ...] >> ks.reshape((-1,) + (1,) * wi.ndim)) & 1
+    return planes.astype(jnp.int8)
+
+
+def bitplane_matmul(x: Array, planes_pos: Array, planes_neg: Array,
+                    out_dtype=jnp.float32) -> Array:
+    """y = x @ (W+ - W-) where W± are given as binary planes.
+
+    Every plane product is an addition-only pass (binary matrix x vector);
+    plane results are combined with shifts (powers of two) — the multiplier-
+    free dataflow of Eq. (10) + the Sec.-4 split of Eq. (5)-(6).
+    """
+    n_planes = planes_pos.shape[0]
+    weights = (2.0 ** jnp.arange(n_planes)).astype(out_dtype)
+
+    def plane_term(k, acc):
+        pp = planes_pos[k].astype(out_dtype)
+        pn = planes_neg[k].astype(out_dtype)
+        return acc + weights[k] * (x @ pp - x @ pn)
+
+    y0 = jnp.zeros(x.shape[:-1] + (planes_pos.shape[-1],), out_dtype)
+    return jax.lax.fori_loop(0, n_planes, plane_term, y0)
+
+
+# ---------------------------------------------------------------------------
+# Full PANN linear op
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PannWeights:
+    """Deployment artifact: quantized signed codes split into ± planes."""
+    w_q: Array          # signed integer codes (float-typed)
+    gamma: Array        # quantization step(s)
+    r: float            # budget used
+
+
+def pann_prepare(w: Array, r: float, axis=None) -> PannWeights:
+    w_q, gamma = pann_quantize(w, r, axis)
+    return PannWeights(w_q=w_q, gamma=gamma, r=r)
+
+
+def pann_matmul_reference(x: Array, pw: PannWeights,
+                          act_bits: int, act_signed: bool = False,
+                          act_scale: Optional[Array] = None) -> Array:
+    """Integer-exact PANN product: quantize activations, integer matmul with
+    the quantized weights (the mathematical result of Eq. 11), rescale.
+    """
+    x_q, s_x = quant.ruq(x, act_bits, act_signed, scale=act_scale)
+    y_int = x_q @ pw.w_q
+    # gamma has keepdims shape (1, d_out) (per-channel) or (1, 1) (per-tensor);
+    # flatten so it broadcasts against (..., d_out)
+    return y_int * s_x * pw.gamma.reshape(-1)
+
+
+def pann_linear(x: Array, w: Array, bias: Optional[Array], r: float,
+                act_bits: int, *, axis=0, qat: bool = False) -> Array:
+    """Model-level PANN linear layer.
+
+    qat=True  -> differentiable fake-quant path (STE on weights + activations).
+    qat=False -> same values, computed via explicit integer codes (PTQ eval).
+    Both produce identical forward numerics up to float association.
+    """
+    if qat:
+        wq = pann_fake_quant(w, r, axis=axis)
+        xq = quant.fake_quant(x, act_bits, signed=False)
+        y = xq @ wq
+    else:
+        w_q, gamma = pann_quantize(w, r, axis=axis)
+        x_q, s_x = quant.ruq(x, act_bits, signed=False)
+        y = (x_q @ (w_q * gamma)) * s_x
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def pann_bitplane_linear(x: Array, pw: PannWeights, act_bits: int,
+                         bias: Optional[Array] = None) -> Array:
+    """Deployment forward through bit-planes — numerically identical to
+    ``pann_matmul_reference`` (integer-exact), multiplier-free dataflow."""
+    x_q, s_x = quant.ruq(x, act_bits, signed=False)
+    pos, neg = unsigned_split(pw.w_q)
+    n_planes = weight_storage_bits(pw.w_q)
+    planes_pos = bitplane_decompose(pos, n_planes)
+    planes_neg = bitplane_decompose(neg, n_planes)
+    y_int = bitplane_matmul(x_q, planes_pos, planes_neg)
+    y = y_int * s_x * pw.gamma.reshape(-1)
+    if bias is not None:
+        y = y + bias
+    return y

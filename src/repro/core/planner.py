@@ -1,0 +1,93 @@
+"""Algorithm 1: determining the optimal PANN parameters for a power budget.
+
+Given a power budget P (per-weight-MAC, in bit flips), sweep the activation
+bit width b~x, set R = P / b~x - 0.5 (Eq. 13), evaluate the PANN-ified model
+on a validation set, and keep the best-performing (b~x, R).
+
+Two evaluation backends:
+  * ``plan_with_eval``   — the paper's Algorithm 1 verbatim (needs an eval fn),
+  * ``plan_with_theory`` — data-free fallback minimizing Eq. (19).
+
+The planner is also the deployment-time knob: moving between equal-power
+curves (Fig. 3) only changes (b~x, R) — no architecture change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Optional, Sequence
+
+from repro.core import mse as mse_theory
+from repro.core import power as pw
+
+
+@dataclasses.dataclass(frozen=True)
+class PannPlan:
+    power_budget: float      # per weight-MAC, bit flips
+    b_x_tilde: int
+    r: float
+    score: float             # accuracy (eval backend) or -MSE (theory backend)
+    candidates: tuple        # (b_x, r, score) for every candidate swept
+
+    def describe(self) -> str:
+        return (f"PANN plan @ P={self.power_budget:.1f} bit-flips/MAC: "
+                f"b~x={self.b_x_tilde}, R={self.r:.2f} "
+                f"(score {self.score:.4f})")
+
+
+def candidate_bit_widths(power: float,
+                         b_range: Sequence[int] = tuple(range(2, 9))
+                         ) -> list[int]:
+    """Bit widths for which the budget leaves a positive addition factor."""
+    return [b for b in b_range if pw.pann_r_for_budget(power, b) > 0.05]
+
+
+def plan_with_eval(power: float,
+                   eval_fn: Callable[[int, float], float],
+                   b_range: Sequence[int] = tuple(range(2, 9)),
+                   ) -> PannPlan:
+    """Algorithm 1. ``eval_fn(b_x_tilde, r) -> accuracy`` runs the quantized
+    network on a validation set (lines 5-8)."""
+    cands = []
+    for b in candidate_bit_widths(power, b_range):
+        r = pw.pann_r_for_budget(power, b)
+        acc = float(eval_fn(b, r))
+        cands.append((b, r, acc))
+    if not cands:
+        raise ValueError(f"power budget {power} too small for any bit width")
+    b, r, acc = max(cands, key=lambda t: t[2])
+    return PannPlan(power, b, r, acc, tuple(cands))
+
+
+def plan_with_theory(power: float,
+                     d: float = 4096.0,
+                     b_range: Sequence[int] = tuple(range(2, 9)),
+                     ) -> PannPlan:
+    """Data-free planner: minimize the Eq. (19) MSE instead of evaluating."""
+    cands = []
+    for b in candidate_bit_widths(power, b_range):
+        r = pw.pann_r_for_budget(power, b)
+        m = mse_theory.mse_pann_at_budget(d, power, b)
+        cands.append((b, r, -m))
+    if not cands:
+        raise ValueError(f"power budget {power} too small for any bit width")
+    b, r, score = max(cands, key=lambda t: t[2])
+    return PannPlan(power, b, r, score, tuple(cands))
+
+
+def budget_from_bits(bits: int) -> float:
+    """Power budget equal to a ``bits``-wide *unsigned* MAC (the paper's
+    experimental protocol: PANN is always matched to the unsigned-MAC cost)."""
+    return pw.p_mac_unsigned(bits)
+
+
+def equal_power_curve(bits: int, b_range: Iterable[int] = range(2, 9)
+                      ) -> list[tuple[int, float]]:
+    """Fig. 3: (b~x, R) combinations matching a b_x-bit unsigned MAC."""
+    p = budget_from_bits(bits)
+    out = []
+    for b in b_range:
+        r = pw.pann_r_for_budget(p, b)
+        if r > 0:
+            out.append((b, r))
+    return out

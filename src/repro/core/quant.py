@@ -1,0 +1,169 @@
+"""Quantizers: RUQ (regular uniform quantizer), clip-calibrated quantization
+(ACIQ-style), and LSQ (learned step size), all as pure-JAX functions.
+
+Everything supports both "true integer" mode (returns integer codes + scale,
+used for PTQ evaluation and the Pallas kernels) and "fake quant" mode (STE;
+used inside differentiable forward passes for QAT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QRange:
+    """Integer code range [qmin, qmax]."""
+    qmin: int
+    qmax: int
+
+    @property
+    def n_levels(self) -> int:
+        return self.qmax - self.qmin + 1
+
+
+def qrange(bits: int, signed: bool, half_range: bool = False) -> QRange:
+    """Code range of a ``bits``-wide quantizer.
+
+    ``half_range=True`` follows the paper's App. A.4 convention for unsigned
+    values on signed hardware: only [0, 2^(b-1)) is used.
+    """
+    if signed:
+        return QRange(-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+    if half_range:
+        return QRange(0, (1 << (bits - 1)) - 1)
+    return QRange(0, (1 << bits) - 1)
+
+
+def _reduce_dims(x: Array, axis) -> tuple:
+    if axis is None:
+        return tuple(range(x.ndim))
+    if isinstance(axis, int):
+        axis = (axis,)
+    return tuple(a % x.ndim for a in axis)
+
+
+# ---------------------------------------------------------------------------
+# RUQ — regular uniform quantizer (absmax / minmax scale)
+# ---------------------------------------------------------------------------
+
+def ruq_scale(x: Array, bits: int, signed: bool, axis=None,
+              half_range: bool = False, eps: float = 1e-12) -> Array:
+    """Per-tensor (axis=None) or per-axis absmax scale."""
+    qr = qrange(bits, signed, half_range)
+    dims = _reduce_dims(x, axis)
+    if signed:
+        # symmetric convention: +amax maps exactly to qmax, so the
+        # quantization error is bounded by scale/2 everywhere
+        amax = jnp.max(jnp.abs(x), axis=dims, keepdims=True)
+        return jnp.maximum(amax, eps) / qr.qmax
+    amax = jnp.max(jnp.maximum(x, 0.0), axis=dims, keepdims=True)
+    return jnp.maximum(amax, eps) / qr.qmax
+
+
+def quantize(x: Array, scale: Array, qr: QRange) -> Array:
+    """Map reals to integer codes (round + clip). Returns float-typed codes."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, qr.qmin, qr.qmax)
+
+
+def dequantize(q: Array, scale: Array) -> Array:
+    return q * scale
+
+
+def ruq(x: Array, bits: int, signed: bool, axis=None,
+        scale: Optional[Array] = None, half_range: bool = False
+        ) -> Tuple[Array, Array]:
+    """Quantize to integer codes, returning (codes, scale)."""
+    qr = qrange(bits, signed, half_range)
+    if scale is None:
+        scale = ruq_scale(x, bits, signed, axis, half_range)
+    return quantize(x, scale, qr), scale
+
+
+def fake_quant(x: Array, bits: int, signed: bool, axis=None,
+               scale: Optional[Array] = None, half_range: bool = False
+               ) -> Array:
+    """Straight-through-estimator fake quantization: forward = dequant(quant),
+    backward = identity (within the clip range, via the STE trick)."""
+    q, s = ruq(x, bits, signed, axis, scale, half_range)
+    xq = dequantize(q, s)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# Clip-calibrated quantization (ACIQ-style)
+# ---------------------------------------------------------------------------
+
+def calibrate_clip(x: Array, bits: int, signed: bool,
+                   n_grid: int = 64) -> Array:
+    """Pick the clipping threshold minimizing quantization MSE on a
+    calibration tensor — the data-driven analogue of ACIQ (Banner et al. 2019).
+
+    Returns a scalar clip value c; the quantizer then uses scale = c / qmax.
+    """
+    qr = qrange(bits, signed)
+    amax = jnp.max(jnp.abs(x)) if signed else jnp.max(jnp.maximum(x, 0.0))
+    ratios = jnp.linspace(0.05, 1.0, n_grid)
+
+    def mse_for(ratio):
+        c = amax * ratio
+        s = c / max(-qr.qmin, qr.qmax) if signed else c / qr.qmax
+        s = jnp.maximum(s, 1e-12)
+        xq = dequantize(quantize(x, s, qr), s)
+        return jnp.mean((x - xq) ** 2)
+
+    mses = jax.vmap(mse_for)(ratios)
+    return amax * ratios[jnp.argmin(mses)]
+
+
+def clip_quant(x: Array, bits: int, signed: bool, clip: Array
+               ) -> Tuple[Array, Array]:
+    """Quantize with a pre-calibrated clip value."""
+    qr = qrange(bits, signed)
+    s = jnp.maximum(clip / qr.qmax, 1e-12)
+    return quantize(x, s, qr), s
+
+
+# ---------------------------------------------------------------------------
+# LSQ — learned step size quantization (Esser et al. 2019)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quant(x: Array, step: Array, qmin: int, qmax: int) -> Array:
+    """LSQ fake-quant with the paper's gradient w.r.t. the step size."""
+    q = jnp.clip(jnp.round(x / step), qmin, qmax)
+    return q * step
+
+
+def _lsq_fwd(x, step, qmin, qmax):
+    v = x / step
+    q = jnp.clip(jnp.round(v), qmin, qmax)
+    return q * step, (v, q, step, x.size)
+
+
+def _lsq_bwd(qmin, qmax, res, g):
+    v, q, step, n = res
+    in_range = (v >= qmin) & (v <= qmax)
+    dx = jnp.where(in_range, g, 0.0)
+    # d(out)/d(step) = q - v inside the range, qmin/qmax at the clip rails
+    dstep_elem = jnp.where(in_range, q - v, jnp.clip(v, qmin, qmax))
+    grad_scale = 1.0 / jnp.sqrt(n * float(qmax if qmax > 0 else 1))
+    dstep = jnp.sum(g * dstep_elem) * grad_scale
+    return dx, jnp.reshape(dstep, jnp.shape(step))
+
+
+lsq_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_init_step(x: Array, bits: int, signed: bool) -> Array:
+    """LSQ step initialization: 2<|x|>/sqrt(qmax)."""
+    qr = qrange(bits, signed)
+    qp = max(qr.qmax, 1)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(qp))

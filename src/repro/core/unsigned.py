@@ -1,0 +1,44 @@
+"""Section 4: switching to unsigned arithmetic.
+
+Any linear layer y = Wx + b with non-negative inputs (post-ReLU / post-quant
+activations) splits exactly into two unsigned passes (Eq. 5-6):
+
+    y+ = W+ x + b+,  y- = W- x + b-,  y = y+ - y-,
+    W+ = ReLU(W), W- = ReLU(-W).
+
+This changes nothing numerically (one extra subtraction per output element)
+but removes the accumulator sign-extension toggling — Observation 1.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def unsigned_split(w: Array) -> Tuple[Array, Array]:
+    """W -> (W+, W-), both non-negative, with W = W+ - W-."""
+    return jnp.maximum(w, 0.0), jnp.maximum(-w, 0.0)
+
+
+def unsigned_matmul(x: Array, w: Array, bias: Array | None = None) -> Array:
+    """Exactly y = x @ W (+ bias), computed as two unsigned passes.
+
+    ``x`` must be non-negative for the MACs to be genuinely unsigned; the
+    function itself is exact regardless.
+    """
+    w_pos, w_neg = unsigned_split(w)
+    y = x @ w_pos - x @ w_neg
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def is_unsigned_exact(x: Array, w: Array, rtol: float = 1e-5) -> bool:
+    """Self-check helper: the split must match the direct product."""
+    ref = x @ w
+    got = unsigned_matmul(x, w)
+    return bool(jnp.allclose(ref, got, rtol=rtol, atol=1e-5))

@@ -1,0 +1,129 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad ragged shapes up to MXU-aligned tile multiples (and slice back),
+  * pick block shapes that keep the working set inside VMEM (~16 MiB),
+  * fall back to interpret mode off-TPU (this container is CPU-only; the
+    kernels are written for TPU and validated via interpret=True).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pann as pann_core
+from repro.core.unsigned import unsigned_split
+from repro.kernels import pann_matmul as _pm
+from repro.kernels import quantize_act as _qa
+from repro.kernels import unsigned_matmul as _um
+
+Array = jax.Array
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_blocks(m: int, n: int, k: int, *, vmem_budget: int = 8 * 2 ** 20
+                 ) -> tuple[int, int, int]:
+    """Simple VMEM-aware block choice: MXU-aligned, shrink k if needed."""
+    bm = min(m, 128)
+    bn = min(n, 128)
+    bk = min(k, 512)
+    # int8 tiles: x (bm*bk) + w (bk*bn) + acc f32 (bm*bn)*4
+    while bk > 128 and (bm * bk + bk * bn + 4 * bm * bn) > vmem_budget:
+        bk //= 2
+    return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# quantize_act
+# ---------------------------------------------------------------------------
+
+def quantize_act(x: Array, bits: int = 8, interpret: bool | None = None
+                 ) -> tuple[Array, Array]:
+    """Per-row unsigned activation quantization. x: (..., K) -> int8 codes."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    bm = min(128, m) if m % 8 == 0 or m < 8 else 8
+    x2p = _pad_to(x2, bm, 0)
+    q, s = _qa.quantize_act(x2p, bits=bits, bm=bm, interpret=interpret)
+    q = q[:m]
+    s = s[:m]
+    return q.reshape(*lead, -1), s.reshape(*lead, 1)
+
+
+# ---------------------------------------------------------------------------
+# unsigned_matmul
+# ---------------------------------------------------------------------------
+
+def unsigned_matmul(x_q: Array, w_q: Array, s_x: Array, s_w: Array,
+                    interpret: bool | None = None) -> Array:
+    """Sec.-4 split matmul on integer codes; pads to tile multiples."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = _pick_blocks(m, n, k)
+    xp = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    sxp = _pad_to(s_x, bm, 0)
+    swp = _pad_to(s_w.reshape(-1), bn, 0)
+    y = _um.unsigned_matmul(xp, wp, sxp, swp, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+    return y[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# pann_matmul
+# ---------------------------------------------------------------------------
+
+def pann_pack_weights(w: Array, r: float, axis=0) -> dict:
+    """Offline packing: PANN-quantize, unsigned-split, bit-plane decompose.
+
+    Returns the deployment artifact consumed by ``pann_matmul``.
+    """
+    w_q, gamma = pann_core.pann_quantize(w, r, axis=axis)
+    pos, neg = unsigned_split(w_q)
+    n_planes = pann_core.weight_storage_bits(w_q)
+    return {
+        "planes_pos": pann_core.bitplane_decompose(pos, n_planes),
+        "planes_neg": pann_core.bitplane_decompose(neg, n_planes),
+        "gamma": gamma.reshape(-1),
+        "n_planes": n_planes,
+        "r": r,
+    }
+
+
+def pann_matmul(x: Array, packed: dict, act_bits: int = 8,
+                mode: str = "fused", interpret: bool | None = None) -> Array:
+    """End-to-end PANN linear: quantize activations (Pallas), bit-plane
+    matmul (Pallas), fused dequant. x: (M, K) float."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    x_q, s_x = quantize_act(x, bits=act_bits, interpret=interpret)
+    planes_pos, planes_neg = packed["planes_pos"], packed["planes_neg"]
+    gamma = packed["gamma"]
+    m, k = x_q.shape
+    _, _, n = planes_pos.shape
+    bm, bn, bk = _pick_blocks(m, n, k)
+    xp = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    pp = _pad_to(_pad_to(planes_pos, bk, 1), bn, 2)
+    pn = _pad_to(_pad_to(planes_neg, bk, 1), bn, 2)
+    sxp = _pad_to(s_x, bm, 0)
+    gp = _pad_to(gamma, bn, 0)
+    y = _pm.pann_matmul(xp, pp, pn, sxp, gp, mode=mode,
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n]

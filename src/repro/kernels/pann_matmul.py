@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: PANN bit-plane matmul (the paper's Eq. 10/11 adapted to
+the MXU — see DESIGN.md §2).
+
+Weights are stored as binary bit-planes of the unsigned-split PANN integer
+codes: planes_pos/planes_neg of shape (P, K, N) with P = b_R (2..6 bits in
+practice, Table 14). Activations are unsigned integer codes (half-range,
+App. A.4) in int8.
+
+Two compute modes, numerically identical:
+
+  * ``mode='fused'``  — reconstruct w_q = sum_k 2^k (B+_k - B-_k) in VMEM
+    (VPU shifts/adds) and issue a single int8 x int8 MXU pass per tile.
+    This is the fast path: the MXU is TPU's cheapest compute primitive.
+  * ``mode='planes'`` — one MXU pass per binary plane with separate pos/neg
+    int32 accumulators, combined by shift-add and one final subtraction —
+    the literal Eq. (10) + Fig. 12(b) dataflow.
+
+Both paths accumulate in int32 and fuse the output dequantization
+(y = y_int * s_x * gamma[n]), so the integer result is bit-exact w.r.t. the
+reference oracle in ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _pann_matmul_kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref,
+                        acc_ref, *, n_planes: int, k_steps: int, mode: str):
+    """Grid = (M/bm, N/bn, K/bk); accumulates over the k dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                      # (bm, bk) int8, non-negative codes
+
+    if mode == "fused":
+        w = jnp.zeros(pos_ref.shape[1:], jnp.int8)
+        for p in range(n_planes):
+            w = w + (jnp.int8(1 << p)) * (pos_ref[p] - neg_ref[p])
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:  # 'planes': per-plane addition-only passes, pos/neg separated
+        acc_p = jnp.zeros(acc_ref.shape, jnp.int32)
+        acc_n = jnp.zeros(acc_ref.shape, jnp.int32)
+        for p in range(n_planes):
+            shift = jnp.int32(1 << p)
+            acc_p += shift * jax.lax.dot_general(
+                x, pos_ref[p], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc_n += shift * jax.lax.dot_general(
+                x, neg_ref[p], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        acc_ref[...] += acc_p - acc_n   # the one Eq.-(6) subtraction
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        y = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = y * sx_ref[...] * gamma_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret"))
+def pann_matmul(x_q: Array, planes_pos: Array, planes_neg: Array,
+                s_x: Array, gamma: Array, *, mode: str = "fused",
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = True) -> Array:
+    """y[m, n] = (x_q @ (W+ - W-))[m, n] * s_x[m] * gamma[n].
+
+    x_q:        (M, K) int8, unsigned activation codes
+    planes_pos: (P, K, N) int8 in {0, 1}
+    planes_neg: (P, K, N) int8 in {0, 1}
+    s_x:        (M, 1) f32 per-row activation scales
+    gamma:      (N,)  f32 per-channel PANN steps
+    """
+    m, k = x_q.shape
+    p, k2, n = planes_pos.shape
+    assert k == k2 and planes_neg.shape == planes_pos.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    kernel = functools.partial(_pann_matmul_kernel, n_planes=p,
+                               k_steps=k_steps, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((p, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((p, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, planes_pos, planes_neg, s_x, gamma.reshape(1, -1))

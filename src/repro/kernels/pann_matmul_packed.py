@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: PANN bit-plane matmul with PACKED plane storage.
+
+The deployment-optimal layout: the binary planes of the unsigned-split PANN
+codes are packed 8 bits per byte along K, so weight HBM bytes are
+2 * P * K * N / 8 (P = b_R plane count) — e.g. b_R=3 costs 0.75 byte/weight
+for BOTH signs vs 2 bytes for bf16 (2.7x) and 1 byte for int8 codes.
+Planes are unpacked in VMEM with shifts (VPU) and fed to the same int8 MXU
+pass as kernels/pann_matmul.
+
+Layout: packed[p, k8, n] holds bit (k8*8 + j) of plane p in bit j.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def pack_planes(planes: Array) -> Array:
+    """(P, K, N) {0,1} int8 -> (P, K/8, N) uint8 (K padded to 8)."""
+    p, k, n = planes.shape
+    pad = (-k) % 8
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, pad), (0, 0)))
+        k += pad
+    bits = planes.reshape(p, k // 8, 8, n).astype(jnp.uint8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint8)).reshape(1, 1, 8, 1)
+    return jnp.sum(bits * weights, axis=2).astype(jnp.uint8)
+
+
+def unpack_planes(packed: Array, k: int) -> Array:
+    """Inverse of pack_planes (reference / in-kernel helper)."""
+    p, k8, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 1, 8, 1)
+    bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)
+    return bits.reshape(p, k8 * 8, n)[:, :k, :].astype(jnp.int8)
+
+
+def _kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref, acc_ref, *,
+            n_planes: int, k_steps: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, bk) int8
+    bk = x.shape[1]
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+
+    def unpack(ref, p):
+        pk = ref[p]                                 # (bk//8, bn) uint8
+        bits = (pk[:, None, :] >> shifts[None, :, None]) & jnp.uint8(1)
+        return bits.reshape(bk, -1).astype(jnp.int8)
+
+    w = jnp.zeros((bk, o_ref.shape[1]), jnp.int8)
+    for p in range(n_planes):
+        w = w + jnp.int8(1 << p) * (unpack(pos_ref, p) - unpack(neg_ref, p))
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(kk == k_steps - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[...] * gamma_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pann_matmul_packed(x_q: Array, packed_pos: Array, packed_neg: Array,
+                       s_x: Array, gamma: Array, *, bm: int = 128,
+                       bn: int = 128, bk: int = 128,
+                       interpret: bool = True) -> Array:
+    """y = (x_q @ (W+ - W-)) * s_x * gamma with bit-packed planes.
+
+    x_q (M, K) int8; packed_pos/neg (P, K/8, N) uint8; K % bk == 0, bk % 8.
+    """
+    m, k = x_q.shape
+    p, k8, n = packed_pos.shape
+    assert k8 * 8 == k and bk % 8 == 0
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    kernel = functools.partial(_kernel, n_planes=p, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((p, bk // 8, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((p, bk // 8, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, packed_pos, packed_neg, s_x, gamma.reshape(1, -1))

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused per-row (per-token) activation quantization.
+
+Computes, in one VMEM pass per row-tile:
+    amax[m]  = max(relu(x[m, :]))
+    scale[m] = amax[m] / qmax          (qmax = 2^(b-1) - 1, half-range App. A.4)
+    q[m, k]  = clip(round(x[m, k] / scale[m]), 0, qmax)  as int8
+
+Per-row scales keep the unsigned-code convention of Sec. 4 (activations are
+non-negative post-ReLU / post-softmax) and avoid a second HBM pass for the
+scale reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, *, qmax: int):
+    x = jnp.maximum(x_ref[...].astype(jnp.float32), 0.0)
+    amax = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def quantize_act(x: Array, *, bits: int = 8, bm: int = 128,
+                 interpret: bool = True) -> tuple[Array, Array]:
+    """x (M, K) float -> (codes int8 (M, K), scales f32 (M, 1))."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    qmax = (1 << (bits - 1)) - 1  # half-range unsigned (App. A.4)
+    kernel = functools.partial(_quantize_kernel, qmax=qmax)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, k), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

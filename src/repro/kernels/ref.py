@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pann_matmul_ref(x_q: Array, planes_pos: Array, planes_neg: Array,
+                    s_x: Array, gamma: Array) -> Array:
+    """Oracle for kernels.pann_matmul: reconstruct signed integer weights from
+    bit-planes, integer matmul, dequantize."""
+    p = planes_pos.shape[0]
+    weights = (2 ** jnp.arange(p, dtype=jnp.int32)).reshape(p, 1, 1)
+    w_q = jnp.sum(weights * (planes_pos.astype(jnp.int32)
+                             - planes_neg.astype(jnp.int32)), axis=0)
+    y = jnp.matmul(x_q.astype(jnp.int32), w_q,
+                   preferred_element_type=jnp.int32)
+    return y.astype(jnp.float32) * s_x * gamma.reshape(1, -1)
+
+
+def quantize_act_ref(x: Array, bits: int = 8) -> tuple[Array, Array]:
+    """Oracle for kernels.quantize_act (per-row half-range unsigned codes)."""
+    qmax = (1 << (bits - 1)) - 1
+    xp = jnp.maximum(x.astype(jnp.float32), 0.0)
+    amax = jnp.max(xp, axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(xp / scale), 0, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def unsigned_matmul_ref(x_q: Array, w_q: Array, s_x: Array, s_w: Array
+                        ) -> Array:
+    """Oracle for kernels.unsigned_matmul: plain signed integer matmul."""
+    y = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+    return y.astype(jnp.float32) * s_x * s_w.reshape(1, -1)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: unsigned-split integer matmul (paper Sec. 4, Fig. 12b).
+
+Takes signed int8 weight codes, splits them into W+ = max(W, 0) and
+W- = max(-W, 0) *inside the kernel* (a VPU op, no extra HBM traffic), runs
+two unsigned MXU accumulations, and applies the single Eq.-(6) subtraction
+per output element, fused with dequantization.
+
+y[m, n] = (x_q @ W+ - x_q @ W-)[m, n] * s_x[m] * s_w[n]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _unsigned_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref,
+                            acc_p, acc_n, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_p[...] = jnp.zeros_like(acc_p)
+        acc_n[...] = jnp.zeros_like(acc_n)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # contract: w codes are symmetric, in [-127, 127] (our quantizers never
+    # emit -128), so both halves of the split fit int8
+    w_pos = jnp.maximum(w, 0).astype(jnp.int8)
+    w_neg = jnp.maximum(-w.astype(jnp.int32), 0).astype(jnp.int8)
+    dims = (((1,), (0,)), ((), ()))
+    acc_p[...] += jax.lax.dot_general(x, w_pos, dims,
+                                      preferred_element_type=jnp.int32)
+    acc_n[...] += jax.lax.dot_general(x, w_neg, dims,
+                                      preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        y = (acc_p[...] - acc_n[...]).astype(jnp.float32)
+        o_ref[...] = y * sx_ref[...] * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def unsigned_matmul(x_q: Array, w_q: Array, s_x: Array, s_w: Array, *,
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = True) -> Array:
+    """x_q (M, K) int8 >= 0; w_q (K, N) int8 signed in [-127, 127];
+    s_x (M, 1); s_w (N,)."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    kernel = functools.partial(_unsigned_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
+                        pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, s_x, s_w.reshape(1, -1))

@@ -1,0 +1,448 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove the sharding config is coherent, and extract
+the roofline terms from the compiled artifact.
+
+MUST be run as its own process (the XLA flag above is set before any jax
+initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out benchmarks/results
+
+Per cell it records: per-device bytes (memory_analysis), HLO FLOPs / bytes
+(cost_analysis), and collective-op bytes parsed from the post-SPMD HLO —
+the inputs to EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import (ModelConfig, ParallelConfig, QuantConfig,
+                                ShapeConfig, TrainConfig)
+from repro.core import costs
+from repro.dist import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.optim import optimizers as OPT
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parallel_for(cfg: ModelConfig, kind: str = "train") -> ParallelConfig:
+    """FSDP when parameters don't fit otherwise.
+
+    Training: fp32 params + Adam state (12 B/param) must fit per data
+    shard -> FSDP above ~3B params. Serving: weights are bf16 and only
+    TP-sharded (16-way); FSDP would re-gather them EVERY step (measured
+    1.9e9 B/device/step on llama3 decode — §Perf iteration 4c), so it is
+    enabled only when the TP shard alone exceeds ~8 GB (dbrx, vision-90b).
+    """
+    if kind == "train":
+        return ParallelConfig(fsdp=costs.param_count(cfg) > 3e9,
+                              remat="block")
+    per_dev = costs.param_count(cfg) * 2 / 16
+    return ParallelConfig(fsdp=per_dev > 8e9, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# input_specs: weak-type-correct ShapeDtypeStruct stand-ins, no allocation
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract model inputs for one cell (train/prefill: full sequences;
+    decode: one new token per sequence)."""
+    b = shape.global_batch
+    t = 1 if shape.kind == "decode" else shape.seq_len
+    out = {"tokens": sds((b, t), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = sds((b, t), jnp.int32)
+    if cfg.family == "encdec":
+        out["enc_inputs"] = sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                jnp.float32)
+    if cfg.family == "vlm":
+        out["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                  jnp.float32)
+    return out
+
+
+def batch_shardings(batch: dict, mesh, shape: ShapeConfig) -> dict:
+    out = {}
+    for k, v in batch.items():
+        out[k] = NamedSharding(mesh, SH.input_sharding(mesh, shape, v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing: collective bytes
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_hlo_shape(text: str) -> int:
+    """Sum bytes of every array shape in an HLO result-type string
+    (handles tuples '(f32[8,4], u32[])')."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind output bytes (per device), from post-SPMD HLO."""
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\(?.*?\)?)\s*(" + "|".join(COLLECTIVES)
+                     + r")(-start)?\(", line)
+        if m:
+            out[m.group(2)] += _bytes_of_hlo_shape(m.group(1))
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell runners
+# ---------------------------------------------------------------------------
+
+def _jit_train(cfg, shape, mesh, par) -> tuple[Any, tuple, dict]:
+    tcfg = TrainConfig()
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        lambda k: ST.make_train_state(k, cfg, tcfg), key)
+    pspecs = SH.param_specs(state_shapes.params, mesh, par)
+    state_specs = ST.TrainState(
+        params=pspecs,
+        opt=OPT.AdamWState(mu=pspecs, nu=pspecs, count=P()),
+        step=P())
+    state_sh = SH.to_named(state_specs, mesh)
+    batch = input_specs(cfg, shape)
+    batch_sh = batch_shardings(batch, mesh, shape)
+
+    def fn(state, batch):
+        return ST.train_step(state, batch, cfg=cfg, tcfg=tcfg, par=par)
+
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jitted, (state_shapes, batch), {"state": state_specs}
+
+
+def _jit_prefill(cfg, shape, mesh, par):
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: MD.init_params(k, cfg), key)
+    pspecs = SH.param_specs(params_shapes, mesh, par)
+    params_sh = SH.to_named(pspecs, mesh)
+    batch = input_specs(cfg, shape)
+    batch_sh = batch_shardings(batch, mesh, shape)
+
+    def fn(params, batch):
+        return ST.prefill_step(params, cfg, batch["tokens"],
+                               enc_inputs=batch.get("enc_inputs"),
+                               image_embeds=batch.get("image_embeds"))
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                     out_shardings=None)
+    return jitted, (params_shapes, batch), {"params": pspecs}
+
+
+def _jit_decode(cfg, shape, mesh, par, serve_quant: bool = False):
+    key = jax.random.PRNGKey(0)
+    if serve_quant:
+        from repro.models.serving import quantize_params_for_serving
+        params_shapes = jax.eval_shape(
+            lambda k: quantize_params_for_serving(
+                MD.init_params(k, cfg), cfg), key)
+    else:
+        params_shapes = jax.eval_shape(lambda k: MD.init_params(k, cfg), key)
+    pspecs = SH.param_specs(params_shapes, mesh, par)
+    params_sh = SH.to_named(pspecs, mesh)
+    batch = input_specs(cfg, shape)
+    b = shape.global_batch
+
+    kwargs = {}
+    if "enc_inputs" in batch:
+        kwargs["enc_inputs"] = batch["enc_inputs"]
+    if "image_embeds" in batch:
+        kwargs["image_embeds"] = batch["image_embeds"]
+    state_shapes = jax.eval_shape(
+        lambda p, **kw: MD.init_decode_state(p, cfg, b, shape.seq_len, **kw),
+        params_shapes, **kwargs)
+    dspecs = SH.cache_specs(state_shapes, mesh)   # greedy; scalars -> P()
+    state_sh = SH.to_named(dspecs, mesh)
+    tokens_sh = NamedSharding(mesh, SH.input_sharding(
+        mesh, shape, batch["tokens"].shape))
+
+    def fn(params, state, tokens):
+        return ST.serve_step(params, cfg, state, tokens)
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, state_sh, tokens_sh),
+                     out_shardings=(None, state_sh), donate_argnums=(1,))
+    return jitted, (params_shapes, state_shapes, batch["tokens"]), \
+        {"params": pspecs, "state": dspecs}
+
+
+# ---------------------------------------------------------------------------
+# FLOPs probes: XLA's cost_analysis counts while-loop bodies ONCE, so the
+# full (scanned) program under-reports FLOPs/bytes. We lower shallow UNROLLED
+# variants (1 group, 2 groups, [+tail]) and extrapolate linearly:
+#     total = overhead + n_groups * delta (+ tail)
+# Inner attention/MoE scans are unrolled in probe mode (cfg.unroll_loops);
+# the remaining per-token recurrences (RWKV wkv update, SSD state passing)
+# are O(d*hd) per token vs O(d^2) projections — <2% and noted in
+# EXPERIMENTS.md.
+# ---------------------------------------------------------------------------
+
+def _probe_metrics(cfg, shape, mesh, par, n_layers, enc_layers=None,
+                   serve_quant: bool = False) -> dict:
+    import dataclasses as dc
+    pcfg = dc.replace(cfg, num_layers=n_layers, unroll_loops=True,
+                      **({"encoder_layers": enc_layers}
+                         if enc_layers is not None else {}))
+    with mesh:
+        if shape.kind == "train":
+            jitted, args, _ = _jit_train(pcfg, shape, mesh, par)
+        elif shape.kind == "prefill":
+            jitted, args, _ = _jit_prefill(pcfg, shape, mesh, par)
+        else:
+            jitted, args, _ = _jit_decode(pcfg, shape, mesh, par,
+                                          serve_quant=serve_quant)
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"]}
+
+
+def probe_extrapolate(cfg, shape, mesh, par, serve_quant: bool = False
+                      ) -> dict:
+    """Per-device FLOPs/bytes/collective-bytes with scan trip counts folded
+    back in via shallow unrolled probes."""
+    from repro.models.transformer import group_layout
+    pattern, n_groups, n_tail = group_layout(cfg)
+    plen = len(pattern)
+    if cfg.family == "encdec":
+        p1 = _probe_metrics(cfg, shape, mesh, par, plen, enc_layers=1,
+                            serve_quant=serve_quant)
+        p2 = _probe_metrics(cfg, shape, mesh, par, 2 * plen, enc_layers=1,
+                            serve_quant=serve_quant)
+        pe = _probe_metrics(cfg, shape, mesh, par, plen, enc_layers=2,
+                            serve_quant=serve_quant)
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            d_dec = p2[k] - p1[k]
+            d_enc = pe[k] - p1[k]
+            overhead = p1[k] - d_dec - d_enc
+            out[k] = overhead + n_groups * d_dec \
+                + cfg.encoder_layers * d_enc
+        return out
+    p1 = _probe_metrics(cfg, shape, mesh, par, plen, serve_quant=serve_quant)
+    p2 = _probe_metrics(cfg, shape, mesh, par, 2 * plen,
+                        serve_quant=serve_quant)
+    probes = {"p1": p1, "p2": p2}
+    if n_tail:
+        probes["pt"] = _probe_metrics(cfg, shape, mesh, par, plen + n_tail,
+                                      serve_quant=serve_quant)
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        delta = p2[k] - p1[k]
+        overhead = p1[k] - delta
+        tail = (probes["pt"][k] - p1[k]) if n_tail else 0.0
+        out[k] = overhead + n_groups * delta + tail
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant_mode: str = "none", verbose: bool = True,
+             probe: bool = True,
+             extra_parallel: Optional[dict] = None) -> dict:
+    """Lower + compile one cell; return the roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = configs.SHAPES_BY_NAME[shape_name]
+    serve_quant = quant_mode == "pann_serve"
+    qc = QuantConfig(mode="none" if serve_quant else quant_mode,
+                     qat=(shape.kind == "train"))
+    cfg = configs.get_config(arch, dtype="bfloat16", quant=qc)
+    par = parallel_for(cfg, shape.kind)
+    if extra_parallel:
+        extra = dict(extra_parallel)
+        moe_impl = extra.pop("moe_impl", None)
+        kv_dtype = extra.pop("kv_cache_dtype", None)
+        if extra:
+            par = dataclasses.replace(par, **extra)
+        if moe_impl:
+            cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+        if kv_dtype:
+            cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "skipped":
+                "pure full attention (DESIGN.md §5)"}
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jitted, args, _ = _jit_train(cfg, shape, mesh, par)
+            lowered = jitted.lower(*args)
+        elif shape.kind == "prefill":
+            jitted, args, _ = _jit_prefill(cfg, shape, mesh, par)
+            lowered = jitted.lower(*args)
+        else:
+            jitted, args, _ = _jit_decode(cfg, shape, mesh, par,
+                                          serve_quant=serve_quant)
+            lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.size
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev,
+        "quant": quant_mode,
+        "fsdp": par.fsdp,
+        "compile_s": round(t1 - t0, 1),
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes_per_device": coll,
+        "model_flops_global": costs.model_flops(cfg, shape),
+        "params": costs.param_count(cfg),
+        "params_active": costs.param_count(cfg, active_only=True),
+    }
+    if mem is not None:
+        # NOTE: on the CPU backend memory_analysis reports whole-program
+        # (all-device) totals; per-device = value / n_devices.
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                record[k] = int(v)
+
+    if probe:
+        try:
+            ext = probe_extrapolate(cfg, shape, mesh, par,
+                                    serve_quant=serve_quant)
+            record["flops_per_device_corrected"] = ext["flops"]
+            record["bytes_per_device_corrected"] = ext["bytes"]
+            record["collective_bytes_corrected"] = ext["coll"]
+        except Exception as e:  # noqa: BLE001
+            record["probe_error"] = repr(e)[:300]
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}: compiled in "
+              f"{record['compile_s']}s")
+        print(f"  memory_analysis: "
+              f"temp={record.get('temp_size_in_bytes', 'n/a')} "
+              f"args={record.get('argument_size_in_bytes', 'n/a')} "
+              f"out={record.get('output_size_in_bytes', 'n/a')}")
+        print(f"  cost_analysis: flops/dev={record['flops_per_device']:.3e} "
+              f"bytes/dev={record['bytes_per_device']:.3e}")
+        print(f"  collectives/dev: " + ", ".join(
+            f"{k}={v:.3e}" for k, v in coll.items() if v))
+    return record
+
+
+ALL_CELLS = [(a, s.name) for a in configs.ARCH_NAMES for s in configs.SHAPES]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "ruq", "ruq_unsigned", "pann",
+                             "pann_serve"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = ALL_CELLS
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    tag = args.mesh + ("" if args.quant == "none" else f"_{args.quant}")
+    path = os.path.join(args.out, f"dryrun_{tag}.json")
+
+    # resumable: skip cells already recorded, write after every cell
+    records, failures = [], []
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        records = prev.get("records", [])
+        print(f"[dryrun] resuming: {len(records)} records already present")
+    done = {(r["arch"], r["shape"], r.get("mesh", "single"))
+            for r in records if "skipped" not in r}
+    done |= {(r["arch"], r["shape"], "single") for r in records
+             if "skipped" in r}
+
+    def flush():
+        with open(path, "w") as f:
+            json.dump({"records": records, "failures": failures}, f,
+                      indent=1)
+
+    for arch, shape in cells:
+        for mp in meshes:
+            key = (arch, shape, "multi" if mp else "single")
+            if key in done:
+                continue
+            try:
+                # FLOPs probes feed the single-pod roofline table only
+                records.append(run_cell(arch, shape, mp, args.quant,
+                                        probe=not mp))
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures.append((arch, shape, mp, repr(e)[:400]))
+                print(f"[dryrun][FAIL] {arch} x {shape} x "
+                      f"{'multi' if mp else 'single'}: {e!r}")
+            flush()
+
+    print(f"[dryrun] wrote {path}: {len(records)} records, "
+          f"{len(failures)} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction (function, not module-level constant, so
+importing never touches jax device state).
+
+Single pod:  (16, 16)      axes ("data", "model")   — 256 chips (TPU v5e pod)
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; everything else in the repo sees the real device
+count (1 on this CPU container).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1) -> Mesh:
+    """Whatever this host actually has — used by trainers/tests."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -1,0 +1,89 @@
+"""The jittable train / prefill / decode step functions shared by the real
+trainer, the server, and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import model as MD
+from repro.optim import optimizers as OPT
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OPT.AdamWState
+    step: jax.Array
+
+
+def make_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = MD.init_params(key, cfg)
+    opt = OPT.AdamW(tcfg).init(params)
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_step(state: TrainState, batch: dict, *, cfg: ModelConfig,
+               tcfg: TrainConfig, par: ParallelConfig
+               ) -> tuple[TrainState, dict]:
+    """One optimizer step (data-parallel mean over the global batch is
+    implicit in the batch-sharded loss; GSPMD inserts the reduce)."""
+    remat = par.remat != "none"
+
+    def loss_fn(params):
+        return MD.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                          enc_inputs=batch.get("enc_inputs"),
+                          image_embeds=batch.get("image_embeds"),
+                          remat=remat)
+
+    if par.microbatches > 1:
+        b = batch["tokens"].shape[0]
+        assert b % par.microbatches == 0
+        mb = b // par.microbatches
+
+        def micro_loss(params, i):
+            sl = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, axis=0)
+                  for k, v in batch.items() if v is not None}
+            return MD.lm_loss(params, cfg, sl["tokens"], sl["labels"],
+                              enc_inputs=sl.get("enc_inputs"),
+                              image_embeds=sl.get("image_embeds"),
+                              remat=remat)
+
+        def loss_and_grad(params):
+            def body(acc, i):
+                l, g = jax.value_and_grad(micro_loss)(params, i)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (l, g), _ = jax.lax.scan(body, zero,
+                                     jnp.arange(par.microbatches))
+            n = float(par.microbatches)
+            return l / n, jax.tree_util.tree_map(lambda t: t / n, g)
+
+        loss, grads = loss_and_grad(state.params)
+    else:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+
+    new_params, new_opt, metrics = OPT.AdamW(tcfg).update(
+        grads, state.opt, state.params)
+    metrics = {"loss": loss, **metrics}
+    return TrainState(new_params, new_opt, state.step + 1), metrics
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, *, enc_inputs=None,
+                 image_embeds=None):
+    out = MD.forward(params, cfg, tokens, enc_inputs=enc_inputs,
+                     image_embeds=image_embeds, remat=False)
+    return out.logits
+
+
+def serve_step(params, cfg: ModelConfig, state: MD.DecodeState, tokens):
+    """One decode tick: (B, 1) tokens -> (B, 1, V) logits + new caches."""
+    return MD.decode_step(params, cfg, state, tokens)

@@ -1,0 +1,151 @@
+"""End-to-end training driver (CLI).
+
+Runs on whatever devices exist (1 CPU here; a pod slice in production):
+deterministic synthetic data, AdamW, checkpoint/restart via the Supervisor,
+straggler telemetry, optional PANN QAT, optional pipeline parallelism.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+        --steps 200 --quant pann --r 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ParallelConfig, QuantConfig, TrainConfig
+from repro.ckpt import checkpoint as ck
+from repro.data.pipeline import SyntheticLM, frontend_stub
+from repro.dist import sharding as SH
+from repro.dist.fault import StepMonitor
+from repro.launch import steps as ST
+from repro.launch.mesh import make_local_mesh
+
+
+def build(args):
+    qc = QuantConfig(mode=args.quant, r=args.r,
+                     act_bits_tilde=args.act_bits, act_bits=args.act_bits,
+                     weight_bits=args.weight_bits, qat=args.quant != "none")
+    cfg = configs.get_config(args.arch, quant=qc)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+        cfg = dataclasses.replace(cfg, quant=qc)
+    if args.d_model:
+        cfg = dataclasses.replace(cfg, d_model=args.d_model,
+                                  d_ff=args.d_ff or 4 * args.d_model,
+                                  num_layers=args.layers or cfg.num_layers)
+    horizon = args.total_steps or args.steps
+    tcfg = TrainConfig(lr=args.lr, total_steps=horizon,
+                       warmup_steps=max(horizon // 20, 5), seed=args.seed)
+    par = ParallelConfig(fsdp=False, remat="block" if args.remat else "none",
+                         microbatches=args.microbatches)
+    return cfg, tcfg, par
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d_model", type=int, default=0)
+    ap.add_argument("--d_ff", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="steps to run in THIS invocation")
+    ap.add_argument("--total_steps", type=int, default=0,
+                    help="LR-schedule horizon (defaults to --steps); set it "
+                         "when resuming so the schedule stays consistent")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "ruq", "ruq_unsigned", "pann"])
+    ap.add_argument("--r", type=float, default=2.0)
+    ap.add_argument("--act_bits", type=int, default=8)
+    ap.add_argument("--weight_bits", type=int, default=8)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model_axis", type=int, default=1)
+    ap.add_argument("--ckpt_dir", default="")
+    ap.add_argument("--ckpt_every", type=int, default=50)
+    ap.add_argument("--log_every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, tcfg, par = build(args)
+    mesh = make_local_mesh(args.model_axis)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch, seed=args.seed)
+
+    pspec_fn = lambda tree: SH.param_specs(tree, mesh, par)
+    key = jax.random.PRNGKey(args.seed)
+
+    with mesh:
+        state = ST.make_train_state(key, cfg, tcfg)
+        pspecs = pspec_fn(jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.params))
+        from repro.optim.optimizers import AdamWState
+        state_specs = ST.TrainState(
+            params=pspecs, opt=AdamWState(mu=pspecs, nu=pspecs, count=P()),
+            step=P())
+        state_sh = SH.to_named(state_specs, mesh)
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, state_sh)
+
+        step_fn = jax.jit(
+            partial(ST.train_step, cfg=cfg, tcfg=tcfg, par=par),
+            in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+
+        monitor = StepMonitor()
+        start_step = 0
+        if args.ckpt_dir:
+            last = ck.latest_step(args.ckpt_dir)
+            if last is not None:
+                tmpl = jax.tree_util.tree_map(np.asarray, state)
+                state = ck.restore(args.ckpt_dir, last, tmpl, state_sh)
+                start_step = last
+                print(f"[train] resumed from step {last}")
+
+        losses = []
+        for step in range(start_step, args.steps):
+            batch = {"tokens": None, "labels": None}
+            host = data.global_batch_arrays(step)
+            batch = {k: jnp.asarray(v) for k, v in host.items()}
+            fe = frontend_stub(cfg, args.batch, step, args.seed)
+            if fe is not None:
+                key_name = ("enc_inputs" if cfg.family == "encdec"
+                            else "image_embeds")
+                batch[key_name] = jnp.asarray(fe)
+            t0 = time.monotonic()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            monitor.record(step, time.monotonic() - t0)
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.3f}")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ck.save(args.ckpt_dir, step + 1, state,
+                        meta={"arch": cfg.name, "loss": loss})
+
+        if args.ckpt_dir:
+            ck.save(args.ckpt_dir, args.steps, state,
+                    meta={"arch": cfg.name, "loss": losses[-1]})
+    summary = {"first_loss": losses[0], "last_loss": losses[-1],
+               "steps": args.steps, **monitor.summary()}
+    print("[train] " + json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Shared layers: norms, embeddings, and QuantLinear — the single choke point
+through which every projection in every architecture runs, realizing the
+paper's quantization modes (none / RUQ / RUQ-unsigned / PANN).
+
+Activation handling for transformers (a generalization the paper doesn't
+need for its ReLU CNNs): activations into projections are signed, so we use
+*asymmetric* (zero-point) quantization: x ~ s (x_q - z) with unsigned codes
+x_q. Then W x = s (W x_q) - s z (sum_k W[k, :]) — the correction term is a
+per-output constant folded into the bias, so the MACs stay unsigned and the
+Sec.-4 accumulator saving is preserved. See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import pann as pann_core
+from repro.core import quant
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale)).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(x: Array, params: dict, kind: str) -> Array:
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def init_norm(d: int, kind: str) -> dict:
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric (zero-point) activation quantization
+# ---------------------------------------------------------------------------
+
+def affine_act_quant(x: Array, bits: int):
+    """x ~= s * (q - z), q unsigned in [0, 2^b - 1]. Returns (q, s, z)."""
+    n = (1 << bits) - 1
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    s = jnp.maximum((hi - lo) / n, 1e-12)
+    z = jnp.round(-lo / s)
+    q = jnp.clip(jnp.round(x / s) + z, 0, n)
+    return q, s, z
+
+
+def affine_fake_quant(x: Array, bits: int) -> Array:
+    q, s, z = affine_act_quant(x, bits)
+    xq = s * (q - z)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# QuantLinear
+# ---------------------------------------------------------------------------
+
+def qlinear(x: Array, w: Array, b: Optional[Array], qc: QuantConfig) -> Array:
+    """y = quant(x) @ quant(w) + b under the configured scheme.
+
+    Shapes: x (..., d_in), w (d_in, d_out). All schemes are implemented as
+    (differentiable) fake-quant so the same code path serves PTQ evaluation
+    and QAT (STE); the integer-exact deployment path lives in repro.kernels.
+
+    'ruq_unsigned' is numerically identical to 'ruq' (Eq. 5-6 is exact) — the
+    difference is pure power accounting — so it shares the ruq compute path;
+    the split itself is exercised by repro.core.unsigned and the kernels.
+    """
+    mode = qc.mode
+    dtype = x.dtype
+    if mode == "none":
+        y = x @ w
+    elif mode in ("ruq", "ruq_unsigned"):
+        wq = quant.fake_quant(w.astype(jnp.float32), qc.weight_bits,
+                              signed=True, axis=0).astype(dtype)
+        xq = affine_fake_quant(x.astype(jnp.float32),
+                               qc.act_bits).astype(dtype)
+        y = xq @ wq
+    elif mode == "pann":
+        wq = pann_core.pann_fake_quant(w.astype(jnp.float32), qc.r,
+                                       axis=0).astype(dtype)
+        xq = affine_fake_quant(x.astype(jnp.float32),
+                               qc.act_bits_tilde).astype(dtype)
+        y = xq @ wq
+    else:
+        raise ValueError(f"unknown quant mode {mode!r}")
+    if b is not None:
+        y = y + b
+    return y
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def apply_linear(x: Array, p: dict, qc: QuantConfig) -> Array:
+    b = p.get("b")
+    b = None if b is None else b.astype(x.dtype)
+    if "w_q" in p:
+        # serving artifact (models/serving.py): PANN int codes + per-channel
+        # gamma, dequantized on load — weight-read bytes are the int8 codes
+        w = (p["w_q"].astype(jnp.float32)
+             * p["w_scale"]).astype(x.dtype)
+        y = x @ w
+        return y if b is None else y + b
+    return qlinear(x, p["w"].astype(x.dtype), b, qc)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(tokens: Array, p: dict, dtype) -> Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(x: Array, p: dict, qc: QuantConfig) -> Array:
+    """LM head (weight-activation matmul -> quantized like any projection)."""
+    return qlinear(x, jnp.transpose(p["table"]).astype(x.dtype), None, qc)

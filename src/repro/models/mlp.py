@@ -1,0 +1,118 @@
+"""Feed-forward blocks: dense (SwiGLU / GELU / ReLU) and Mixture-of-Experts.
+
+MoE baseline: top-k softmax router + a scan over experts, each expert a
+TP-sharded FFN, with per-token gates zeroed for non-selected experts. This is
+GSPMD-friendly and memory-bounded (one expert's activations at a time), at
+the cost of E/k redundant FLOPs — the expert-parallel dispatch path in
+``repro.dist.moe_ep`` removes that overhead (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain as C
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def _act(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "silu": jax.nn.silu}.get(name, jax.nn.silu)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": L.init_linear(ks[0], d, ff),
+                "w_up": L.init_linear(ks[1], d, ff),
+                "w_down": L.init_linear(ks[2], ff, d)}
+    return {"w_up": L.init_linear(ks[1], d, ff),
+            "w_down": L.init_linear(ks[2], ff, d)}
+
+
+def apply_mlp(x: Array, p: dict, cfg: ModelConfig) -> Array:
+    qc = cfg.quant
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(L.apply_linear(x, p["w_gate"], qc)) \
+            * L.apply_linear(x, p["w_up"], qc)
+    else:
+        h = _act(cfg.activation)(L.apply_linear(x, p["w_up"], qc))
+    return L.apply_linear(h, p["w_down"], qc)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    e = cfg.moe.num_experts
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+
+    def stack(k, shape_in, shape_out):
+        return jax.random.normal(k, (e, shape_in, shape_out),
+                                 jnp.float32) * scale
+
+    return {
+        "router": L.init_linear(ks[0], d, e, scale=0.02),
+        "w_gate": stack(ks[1], d, ff),
+        "w_up": stack(ks[2], d, ff),
+        "w_down": jax.random.normal(ks[3], (e, ff, d), jnp.float32) * ff ** -0.5,
+    }
+
+
+def router_topk(logits: Array, top_k: int) -> tuple[Array, Array]:
+    """Softmax-after-topk gates (Mixtral convention). Returns (gates, mask).
+
+    gates: (..., E) with zeros outside the top-k; mask: bool (..., E).
+    """
+    e = logits.shape[-1]
+    vals, idx = jax.lax.top_k(logits, top_k)
+    probs = jax.nn.softmax(vals, axis=-1)
+    one_hot = jax.nn.one_hot(idx, e, dtype=logits.dtype)  # (..., k, E)
+    gates = jnp.einsum("...ke,...k->...e", one_hot, probs)
+    mask = gates > 0
+    return gates, mask
+
+
+def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:
+    """x: (B, T, d) -> (y, aux_loss). Scan over experts (see module doc)."""
+    assert cfg.moe is not None
+    qc = cfg.quant
+    e = cfg.moe.num_experts
+    logits = L.apply_linear(x, p["router"], qc).astype(jnp.float32)
+    gates, mask = router_topk(logits, cfg.moe.top_k)
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    f = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))        # fraction routed
+    pbar = jnp.mean(probs_full, axis=(0, 1))
+    aux = e * jnp.sum(f * pbar)
+
+    act = jax.nn.silu if cfg.activation in ("swiglu", "geglu") else \
+        _act(cfg.activation)
+
+    def expert_step(carry, ew):
+        w_gate, w_up, w_down, gate_e = ew
+        h = act(L.qlinear(x, w_gate.astype(x.dtype), None, qc)) \
+            * L.qlinear(x, w_up.astype(x.dtype), None, qc)
+        # pin TP sharding: propagation dies through the scan-sliced expert
+        # weights and GSPMD otherwise computes the FULL d_ff per device
+        # (measured 16x FLOP bloat; EXPERIMENTS.md §Perf iteration 3a)
+        h = C.constrain_axis(h, -1, "model")
+        y_e = L.qlinear(h, w_down.astype(x.dtype), None, qc)
+        return carry + gate_e[..., None].astype(x.dtype) * y_e, None
+
+    gates_t = jnp.moveaxis(gates, -1, 0)                        # (E, B, T)
+    y0 = jnp.zeros_like(x)
+    y, _ = jax.lax.scan(expert_step, y0,
+                        (p["w_gate"], p["w_up"], p["w_down"], gates_t),
+                        unroll=e if cfg.unroll_loops else 1)
+    return y, aux

@@ -1,0 +1,257 @@
+"""Top-level model: init / forward / loss / decode for every architecture.
+
+Layers are stacked per repeating group and scanned (lax.scan) with optional
+per-group rematerialization; heterogeneous tails (e.g. zamba2's 38 = 6x6+2)
+run unrolled after the scan. Decode threads stacked per-group caches through
+the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain as C
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_group(key, cfg: ModelConfig, pattern) -> dict:
+    ks = jax.random.split(key, len(pattern))
+    return {"layers": [T.init_layer(k, cfg, s) for k, s in zip(ks, pattern)]}
+
+
+def _init_stack(key, cfg: ModelConfig, num_layers: Optional[int] = None,
+                role: str = "decoder") -> dict:
+    pattern, n_groups, n_tail = T.group_layout(cfg, num_layers, role)
+    kg, kt = jax.random.split(key)
+    groups = jax.vmap(lambda k: _init_group(k, cfg, pattern))(
+        jax.random.split(kg, n_groups))
+    out = {"groups": groups}
+    if n_tail:
+        tks = jax.random.split(kt, n_tail)
+        out["tail"] = [T.init_layer(tks[i], cfg, pattern[i])
+                       for i in range(n_tail)]
+    return out
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "decoder": _init_stack(ks[1], cfg),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(ks[2], cfg.d_model,
+                                          cfg.padded_vocab, scale=0.02)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = T.init_shared_attn(ks[3], cfg)
+    if cfg.family == "encdec":
+        params["encoder"] = _init_stack(ks[4], cfg, cfg.encoder_layers,
+                                        role="encoder")
+        params["enc_norm"] = L.init_norm(cfg.d_model, cfg.norm)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_stack(x: Array, stack: dict, cfg: ModelConfig, *, causal: bool,
+               shared: Optional[dict] = None,
+               cross_src: Optional[Array] = None,
+               remat: bool = True, role: str = "decoder"
+               ) -> tuple[Array, Array]:
+    pattern = T.group_pattern(cfg, role)
+
+    def group_body(carry, gp):
+        h, aux = carry
+        for i, spec in enumerate(pattern):
+            h, a = T.apply_layer(h, gp["layers"][i], cfg, spec,
+                                 shared=shared, cross_src=cross_src,
+                                 causal=causal)
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    n_groups = jax.tree_util.tree_leaves(stack["groups"])[0].shape[0]
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stack["groups"],
+                               unroll=n_groups if cfg.unroll_loops else 1)
+    for i, lp in enumerate(stack.get("tail", [])):
+        x, a = T.apply_layer(x, lp, cfg, pattern[i % len(pattern)],
+                             shared=shared, cross_src=cross_src,
+                             causal=causal)
+        aux = aux + a
+    return x, aux
+
+
+class ForwardOut(NamedTuple):
+    logits: Array
+    aux_loss: Array
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
+            enc_inputs: Optional[Array] = None,
+            image_embeds: Optional[Array] = None,
+            remat: bool = True) -> ForwardOut:
+    """tokens: (B, T) int32. enc_inputs: (B, S_enc, d) stubbed frontend
+    embeddings (encdec). image_embeds: (B, n_img, d) stubbed patch embeddings
+    (vlm)."""
+    dtype = _dtype(cfg)
+    x = C.constrain_batch(L.embed(tokens, params["embed"], dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+    cross_src = None
+    if cfg.family == "encdec":
+        assert enc_inputs is not None
+        enc, _ = _run_stack(enc_inputs.astype(dtype), params["encoder"], cfg,
+                            causal=False, remat=remat, role="encoder")
+        cross_src = L.apply_norm(enc, params["enc_norm"], cfg.norm)
+    elif cfg.family == "vlm":
+        assert image_embeds is not None
+        cross_src = image_embeds.astype(dtype)
+
+    x, aux = _run_stack(x, params["decoder"], cfg, causal=True,
+                        shared=params.get("shared_attn"),
+                        cross_src=cross_src, remat=remat)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"], cfg.quant)
+    else:
+        logits = L.apply_linear(x, params["lm_head"], cfg.quant)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return ForwardOut(logits=logits, aux_loss=aux)
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens: Array, labels: Array,
+            *, enc_inputs=None, image_embeds=None, remat: bool = True,
+            aux_weight: float = 0.01) -> Array:
+    out = forward(params, cfg, tokens, enc_inputs=enc_inputs,
+                  image_embeds=image_embeds, remat=remat)
+    logits = out.logits
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * out.aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any            # stacked per-group caches (+ "tail" list)
+    cross_kv: Any          # stacked per-group cross (K, V) or None
+    position: Array
+
+
+def init_decode_state(params: dict, cfg: ModelConfig, batch: int,
+                      max_len: int, *, enc_inputs=None, image_embeds=None
+                      ) -> DecodeState:
+    dtype = _dtype(cfg)
+    pattern, n_groups, n_tail = T.group_layout(cfg)
+
+    def one_group_cache(_):
+        return tuple(T.init_layer_cache(cfg, s, batch, max_len, dtype)
+                     for s in pattern)
+
+    caches = {"groups": jax.vmap(one_group_cache)(jnp.arange(n_groups))}
+    if n_tail:
+        caches["tail"] = [T.init_layer_cache(cfg, pattern[i], batch, max_len,
+                                             dtype) for i in range(n_tail)]
+
+    cross_kv = None
+    if cfg.family in ("encdec", "vlm"):
+        if cfg.family == "encdec":
+            assert enc_inputs is not None
+            enc, _ = _run_stack(enc_inputs.astype(dtype), params["encoder"],
+                                cfg, causal=False, remat=False,
+                                role="encoder")
+            src = L.apply_norm(enc, params["enc_norm"], cfg.norm)
+        else:
+            assert image_embeds is not None
+            src = image_embeds.astype(dtype)
+
+        # project cross K/V once per cross-attn layer (stacked over groups)
+        def project_group(gp):
+            outs = []
+            for i, spec in enumerate(pattern):
+                if spec.kind == "cross_attn":
+                    outs.append(A.project_cross_kv(src,
+                                                   gp["layers"][i]["xattn"],
+                                                   cfg))
+            return tuple(outs)
+
+        cross_kv = jax.vmap(project_group)(params["decoder"]["groups"])
+    return DecodeState(caches=caches, cross_kv=cross_kv,
+                       position=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: DecodeState,
+                tokens: Array) -> tuple[Array, DecodeState]:
+    """tokens: (B, 1) -> (logits (B, 1, V), new state)."""
+    dtype = _dtype(cfg)
+    pattern, _, _ = T.group_layout(cfg)
+    shared = params.get("shared_attn")
+    x = C.constrain_batch(L.embed(tokens, params["embed"], dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+    def group_body(h, xs):
+        gp, gcache, gcross = xs
+        new_caches = []
+        xi = 0
+        for i, spec in enumerate(pattern):
+            ckv = None
+            if spec.kind == "cross_attn" and gcross is not None:
+                ckv = gcross[xi]
+                xi += 1
+            h, c = T.decode_layer(h, gcache[i], gp["layers"][i], cfg, spec,
+                                  shared=shared, cross_kv=ckv)
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    xs = (params["decoder"]["groups"], state.caches["groups"], state.cross_kv)
+    n_groups = jax.tree_util.tree_leaves(xs[0])[0].shape[0]
+    # ALWAYS unrolled for decode: a while-loop over groups makes GSPMD
+    # all-gather the stacked KV caches as loop xs (measured 7.1e10 B/device
+    # per step — the entire global cache; §Perf iteration 4b). Decode bodies
+    # are single-token, so straight-line code is cheap to compile and keeps
+    # every layer's cache shard-local.
+    x, new_group_caches = jax.lax.scan(group_body, x, xs, unroll=n_groups)
+
+    new_caches = {"groups": new_group_caches}
+    if "tail" in state.caches:
+        tail_caches = []
+        for i, lp in enumerate(params["decoder"].get("tail", [])):
+            x, c = T.decode_layer(x, state.caches["tail"][i], lp, cfg,
+                                  pattern[i % len(pattern)], shared=shared)
+            tail_caches.append(c)
+        new_caches["tail"] = tail_caches
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"], cfg.quant)
+    else:
+        logits = L.apply_linear(x, params["lm_head"], cfg.quant)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, DecodeState(caches=new_caches, cross_kv=state.cross_kv,
+                               position=state.position + 1)

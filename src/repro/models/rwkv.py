@@ -1,0 +1,144 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent decay
+(arXiv:2404.05892), plus the squared-ReLU channel mix.
+
+Time mixing keeps a per-head (hd x hd) wkv state — O(1) memory per token —
+so long_500k decode is natural. Training runs the recurrence with a chunked
+lax.scan (one scan step per CHUNK of tokens, recurrence vectorized inside the
+chunk), which keeps compile size flat and exposes parallelism to XLA.
+
+PANN applies to all the static mixing matrices (r/k/v/g/o projections and the
+channel-mix matrices); the decay path is elementwise (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import constrain as C
+from repro.models import layers as L
+
+Array = jax.Array
+
+HEAD_DIM = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: Array      # (B, H, hd, hd)
+    shift_tm: Array  # (B, d) previous token (time mix)
+    shift_cm: Array  # (B, d) previous token (channel mix)
+    length: Array
+
+
+def _heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % HEAD_DIM == 0
+    return cfg.d_model // HEAD_DIM
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,g,w token-shift mix
+        "wr": L.init_linear(ks[0], d, d),
+        "wk": L.init_linear(ks[1], d, d),
+        "wv": L.init_linear(ks[2], d, d),
+        "wg": L.init_linear(ks[3], d, d),
+        # data-dependent decay: low-rank w = exp(-exp(base + tanh(x A) B))
+        "decay_a": L.init_linear(ks[4], d, 64),
+        "decay_b": L.init_linear(ks[5], 64, d),
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "bonus": jnp.zeros((h, HEAD_DIM), jnp.float32),  # per-head "u" term
+        "ln_x": L.init_norm(d, "layernorm"),
+        "wo": L.init_linear(ks[7], d, d),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "mu": jnp.full((2, d), 0.5, jnp.float32),
+        "wk": L.init_linear(ks[0], d, cfg.d_ff),
+        "wv": L.init_linear(ks[1], cfg.d_ff, d),
+    }
+
+
+def _token_shift(x: Array, prev: Array) -> Array:
+    """Shifted sequence: [prev, x_0, ..., x_{T-2}]. x: (B, T, d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inner(r, k, v, w, u, state):
+    """Sequential wkv recurrence over one chunk (vectorized over B, H).
+
+    r,k,v: (B, T, H, hd); w: (B, T, H, hd) decays in (0,1); u: (H, hd).
+    state: (B, H, hd, hd). Returns (out (B,T,H,hd), new state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
+                   state: RWKVState | None = None
+                   ) -> tuple[Array, Array, Array]:
+    """x: (B, T, d) -> (y, final wkv state, last token). Prefill/training."""
+    b, t, d = x.shape
+    h = _heads(cfg)
+    qc = cfg.quant
+    prev = jnp.zeros((b, d), x.dtype) if state is None else \
+        state.shift_tm.astype(x.dtype)
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    mix = [x * mu[i] + xs * (1 - mu[i]) for i in range(5)]
+    r = C.constrain_axis(
+        L.apply_linear(mix[0], p["wr"], qc).reshape(b, t, h, HEAD_DIM), 2)
+    k = C.constrain_axis(
+        L.apply_linear(mix[1], p["wk"], qc).reshape(b, t, h, HEAD_DIM), 2)
+    v = C.constrain_axis(
+        L.apply_linear(mix[2], p["wv"], qc).reshape(b, t, h, HEAD_DIM), 2)
+    g = jax.nn.silu(L.apply_linear(mix[3], p["wg"], qc))
+    dlow = jnp.tanh(L.apply_linear(mix[4], p["decay_a"], qc))
+    dd = L.apply_linear(dlow, p["decay_b"], qc) + p["decay_base"]
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(b, t, h, HEAD_DIM)
+
+    s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32) if state is None \
+        else state.wkv
+    out, s_fin = _time_mix_inner(r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), w,
+                                 p["bonus"], s0)
+    out = out.reshape(b, t, d).astype(x.dtype)
+    out = L.apply_norm(out, p["ln_x"], "layernorm") * g
+    return L.apply_linear(out, p["wo"], qc), s_fin, x[:, -1, :]
+
+
+def apply_channel_mix(x: Array, p: dict, cfg: ModelConfig,
+                      prev: Array | None = None) -> tuple[Array, Array]:
+    b, t, d = x.shape
+    qc = cfg.quant
+    pv = jnp.zeros((b, d), x.dtype) if prev is None else prev.astype(x.dtype)
+    xs = _token_shift(x, pv)
+    mu = p["mu"].astype(x.dtype)
+    xk = x * mu[0] + xs * (1 - mu[0])
+    k = jnp.square(jax.nn.relu(L.apply_linear(xk, p["wk"], qc)))
+    return L.apply_linear(k, p["wv"], qc), x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    h = _heads(cfg)
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        length=jnp.zeros((), jnp.int32))

@@ -1,0 +1,59 @@
+"""Serving-time weight quantization: materialize PANN's deployment artifact.
+
+Every projection weight is replaced by its PANN integer codes (Eq. 12,
+per-output-channel gamma) stored in int8 — b_R <= 5 bits in practice
+(Table 14), so int8 holds them losslessly — with dequant-on-load in the
+forward. This is the §Perf iteration-5 change: decode is memory-bound and
+weight-read bytes drop 2x vs bf16 (4x vs f32); the Pallas bit-plane kernel
+(repro.kernels.pann_matmul) realizes the full b_R-bit layout on TPU.
+
+Activations stay in the compute dtype (W-PANN/A16); the PTQ accuracy story
+at matched power is measured separately in benchmarks/table2_ptq.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import pann as pann_core
+
+# projection parents whose "w" is PANN-quantized for serving
+_QUANT_PARENTS = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj",
+    "out_proj", "wr", "wg", "decay_a", "decay_b", "lm_head",
+}
+
+
+def quantize_params_for_serving(params: Any, cfg: ModelConfig,
+                                r: float | None = None,
+                                store_dtype=jnp.int8) -> Any:
+    """Walk the param tree; replace {"w": W} under known projections with
+    {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
+    embedding gather table stay in floating point (documented)."""
+    r = r if r is not None else cfg.quant.r
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            if "w" in node and name in _QUANT_PARENTS \
+                    and getattr(node["w"], "ndim", 0) >= 2:
+                w = node["w"]
+                w_q, gamma = pann_core.pann_quantize(
+                    w.astype(jnp.float32), r, axis=w.ndim - 2)
+                out = {
+                    "w_q": jnp.clip(w_q, -127, 127).astype(store_dtype),
+                    "w_scale": gamma.astype(jnp.float32),
+                }
+                if "b" in node:
+                    out["b"] = node["b"]
+                return out
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, name) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v, name) for v in node)
+        return node
+
+    return walk(params)

@@ -1,0 +1,115 @@
+"""Optimizers (AdamW, SGD+momentum), LR schedules, global-norm clipping —
+pure-JAX pytree implementations (no optax in this environment)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Array = jax.Array
+tmap = jax.tree_util.tree_map
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: Array
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+    count: Array
+
+
+def cosine_warmup_schedule(cfg: TrainConfig) -> Callable[[Array], Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < cfg.warmup_steps, warm,
+                         cfg.lr * (0.1 + 0.9 * cos))
+    return lr
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return tmap(lambda g: g * scale, grads), gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    cfg: TrainConfig
+
+    def init(self, params: Any) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(mu=tmap(z, params), nu=tmap(z, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> tuple[Any, AdamWState, dict]:
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+        step = state.count + 1
+        stepf = step.astype(jnp.float32)
+        lr = cosine_warmup_schedule(c)(step)
+        b1, b2 = c.beta1, c.beta2
+
+        new_mu = tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+        new_nu = tmap(lambda v, g: b2 * v
+                      + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+
+        def upd(p, m, v):
+            mhat = m / (1 - b1 ** stepf)
+            vhat = v / (1 - b2 ** stepf)
+            delta = mhat / (jnp.sqrt(vhat) + 1e-8)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = tmap(upd, params, new_mu, new_nu)
+        metrics = {"lr": lr, "grad_norm": gnorm}
+        return new_params, AdamWState(new_mu, new_nu, step), metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    cfg: TrainConfig
+    momentum: float = 0.9
+
+    def init(self, params: Any) -> SGDState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return SGDState(momentum=tmap(z, params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads: Any, state: SGDState, params: Any
+               ) -> tuple[Any, SGDState, dict]:
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+        step = state.count + 1
+        lr = cosine_warmup_schedule(c)(step)
+        new_m = tmap(lambda m, g: self.momentum * m + g.astype(jnp.float32),
+                     state.momentum, grads)
+        new_params = tmap(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_m)
+        return new_params, SGDState(new_m, step), {"lr": lr,
+                                                   "grad_norm": gnorm}
+
+
+def make_optimizer(name: str, cfg: TrainConfig):
+    if name == "adamw":
+        return AdamW(cfg)
+    if name == "sgdm":
+        return SGDM(cfg)
+    raise ValueError(name)

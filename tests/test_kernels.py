@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pann as pann_core
+from repro.core.unsigned import unsigned_split
+from repro.kernels import ops, ref
+from repro.kernels.pann_matmul import pann_matmul as pann_matmul_raw
+from repro.kernels.quantize_act import quantize_act as quantize_act_raw
+from repro.kernels.unsigned_matmul import unsigned_matmul as unsigned_raw
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_planes(k, n, n_planes, lo=-12, hi=13):
+    w_q = jnp.asarray(RNG.integers(lo, hi, (k, n)), jnp.float32)
+    pos, neg = unsigned_split(w_q)
+    pp = pann_core.bitplane_decompose(pos, n_planes)
+    pn = pann_core.bitplane_decompose(neg, n_planes)
+    return w_q, pp, pn
+
+
+# ---------------------------------------------------------------------------
+# pann_matmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (128, 256, 128),
+                                   (256, 512, 256)])
+@pytest.mark.parametrize("mode", ["fused", "planes"])
+def test_pann_matmul_matches_oracle(m, k, n, mode):
+    n_planes = 4
+    _, pp, pn = _mk_planes(k, n, n_planes)
+    x_q = jnp.asarray(RNG.integers(0, 128, (m, k)), jnp.int8)
+    s_x = jnp.asarray(RNG.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    gamma = jnp.asarray(RNG.uniform(0.001, 0.01, (n,)), jnp.float32)
+    got = pann_matmul_raw(x_q, pp, pn, s_x, gamma, mode=mode,
+                          bm=128, bn=128, bk=128, interpret=True)
+    want = ref.pann_matmul_ref(x_q, pp, pn, s_x, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pann_matmul_modes_bit_identical():
+    _, pp, pn = _mk_planes(128, 128, 3)
+    x_q = jnp.asarray(RNG.integers(0, 64, (128, 128)), jnp.int8)
+    s_x = jnp.ones((128, 1), jnp.float32)
+    gamma = jnp.ones((128,), jnp.float32)
+    a = pann_matmul_raw(x_q, pp, pn, s_x, gamma, mode="fused", interpret=True)
+    b = pann_matmul_raw(x_q, pp, pn, s_x, gamma, mode="planes", interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n_planes", [1, 2, 3, 5, 6])
+def test_pann_matmul_plane_count_sweep(n_planes):
+    hi = (1 << n_planes)
+    w_q, pp, pn = _mk_planes(128, 128, n_planes, lo=-(hi - 1), hi=hi)
+    x_q = jnp.asarray(RNG.integers(0, 100, (128, 128)), jnp.int8)
+    s_x = jnp.asarray(RNG.uniform(0.01, 1.0, (128, 1)), jnp.float32)
+    gamma = jnp.full((128,), 0.5, jnp.float32)
+    got = pann_matmul_raw(x_q, pp, pn, s_x, gamma, interpret=True)
+    want = ref.pann_matmul_ref(x_q, pp, pn, s_x, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantize_act kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 6, 8])
+@pytest.mark.parametrize("m,k", [(128, 256), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_act_matches_oracle(bits, m, k, dtype):
+    x = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    q, s = quantize_act_raw(x, bits=bits, bm=128, interpret=True)
+    qr, sr = ref.quantize_act_ref(x, bits=bits)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    else:
+        # bf16 inputs can land exactly on .5 rounding boundaries where the
+        # interpret-mode and jit division differ by 1 ulp -> code off by 1
+        diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+        assert diff.max() <= 1 and (diff > 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    assert int(q.max()) <= (1 << (bits - 1)) - 1 and int(q.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# unsigned_matmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (128, 384, 256)])
+def test_unsigned_matmul_matches_oracle(m, k, n):
+    x_q = jnp.asarray(RNG.integers(0, 128, (m, k)), jnp.int8)
+    w_q = jnp.asarray(RNG.integers(-127, 128, (k, n)), jnp.int8)
+    s_x = jnp.asarray(RNG.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    s_w = jnp.asarray(RNG.uniform(0.001, 0.01, (n,)), jnp.float32)
+    got = unsigned_raw(x_q, w_q, s_x, s_w, bm=128, bn=128, bk=128,
+                       interpret=True)
+    want = ref.unsigned_matmul_ref(x_q, w_q, s_x, s_w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ops.py wrappers (padding paths + end-to-end PANN linear)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(100, 200, 72), (13, 130, 7), (128, 64, 64)])
+def test_ops_unsigned_matmul_ragged(m, k, n):
+    x_q = jnp.asarray(RNG.integers(0, 128, (m, k)), jnp.int8)
+    w_q = jnp.asarray(RNG.integers(-127, 128, (k, n)), jnp.int8)
+    s_x = jnp.asarray(RNG.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    s_w = jnp.asarray(RNG.uniform(0.001, 0.01, (n,)), jnp.float32)
+    got = ops.unsigned_matmul(x_q, w_q, s_x, s_w, interpret=True)
+    want = ref.unsigned_matmul_ref(x_q, w_q, s_x, s_w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 96, 80), (200, 256, 120)])
+def test_ops_pann_matmul_end_to_end(m, k, n):
+    """Kernel path == model-level bitplane linear (core.pann oracle)."""
+    w = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+    x = jnp.abs(jnp.asarray(RNG.standard_normal((m, k)), jnp.float32))
+    r = 2.0
+    packed = ops.pann_pack_weights(w, r, axis=0)
+    got = ops.pann_matmul(x, packed, act_bits=8, interpret=True)
+
+    # oracle: integer-exact reference with the same per-row act quantization
+    x_q, s_x = ref.quantize_act_ref(x, bits=8)
+    w_q, gamma = pann_core.pann_quantize(w, r, axis=0)
+    want = (jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+            .astype(jnp.float32)) * s_x * gamma.reshape(1, -1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # and it approximates the fp32 product
+    rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.15
+
+
+def test_ops_quantize_act_leading_dims():
+    x = jnp.asarray(RNG.standard_normal((4, 32, 96)), jnp.float32)
+    q, s = ops.quantize_act(x, bits=6, interpret=True)
+    assert q.shape == (4, 32, 96) and s.shape == (4, 32, 1)
+    qr, sr = ref.quantize_act_ref(x.reshape(-1, 96), bits=6)
+    np.testing.assert_array_equal(np.asarray(q).reshape(-1, 96),
+                                  np.asarray(qr))

@@ -1,0 +1,46 @@
+"""Packed bit-plane PANN kernel vs oracle + pack/unpack roundtrip."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pann as pann_core
+from repro.core.unsigned import unsigned_split
+from repro.kernels import ref
+from repro.kernels.pann_matmul_packed import (pack_planes, pann_matmul_packed,
+                                              unpack_planes)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("k,n,p", [(128, 128, 3), (256, 128, 5), (64, 64, 1)])
+def test_pack_unpack_roundtrip(k, n, p):
+    planes = jnp.asarray(RNG.integers(0, 2, (p, k, n)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.shape == (p, k // 8, n) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_planes(packed, k)),
+                                  np.asarray(planes))
+
+
+@pytest.mark.parametrize("m,k,n,n_planes", [(128, 128, 128, 3),
+                                            (128, 256, 128, 4),
+                                            (256, 128, 256, 2)])
+def test_packed_matmul_matches_oracle(m, k, n, n_planes):
+    hi = 1 << n_planes
+    w_q = jnp.asarray(RNG.integers(-(hi - 1), hi, (k, n)), jnp.float32)
+    pos, neg = unsigned_split(w_q)
+    pp = pann_core.bitplane_decompose(pos, n_planes)
+    pn = pann_core.bitplane_decompose(neg, n_planes)
+    x_q = jnp.asarray(RNG.integers(0, 128, (m, k)), jnp.int8)
+    s_x = jnp.asarray(RNG.uniform(0.01, 0.1, (m, 1)), jnp.float32)
+    gamma = jnp.asarray(RNG.uniform(0.001, 0.01, (n,)), jnp.float32)
+    got = pann_matmul_packed(x_q, pack_planes(pp), pack_planes(pn),
+                             s_x, gamma, interpret=True)
+    want = ref.pann_matmul_ref(x_q, pp, pn, s_x, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_packed_storage_is_8x_smaller():
+    planes = jnp.asarray(RNG.integers(0, 2, (4, 512, 256)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.size * packed.dtype.itemsize \
+        == planes.size * planes.dtype.itemsize // 8

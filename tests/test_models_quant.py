@@ -1,0 +1,79 @@
+"""PANN / RUQ quantization through full model forward + QAT gradients."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import model as MD
+
+QUANT_ARCHS = ["llama3-8b", "mixtral-8x7b", "rwkv6-1.6b", "zamba2-1.2b"]
+
+
+def _setup(arch, quant):
+    cfg = configs.reduced(configs.get_config(arch))
+    cfg = dataclasses.replace(cfg, quant=quant)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    return cfg, params, tokens
+
+
+@pytest.mark.parametrize("arch", QUANT_ARCHS)
+@pytest.mark.parametrize("mode", ["ruq", "ruq_unsigned", "pann"])
+def test_quantized_forward_finite_and_close(arch, mode):
+    qc = QuantConfig(mode=mode, weight_bits=8, act_bits=8, r=4.0,
+                     act_bits_tilde=8)
+    cfg, params, tokens = _setup(arch, qc)
+    out_q = jax.jit(lambda p, t: MD.forward(p, cfg, t, remat=False))(
+        params, tokens)
+    cfg_fp = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+    out_fp = jax.jit(lambda p, t: MD.forward(p, cfg_fp, t, remat=False))(
+        params, tokens)
+    assert bool(jnp.isfinite(out_q.logits).all())
+    # 8-bit / R=4 quantization should track the fp logits reasonably
+    denom = float(jnp.abs(out_fp.logits).mean()) + 1e-6
+    err = float(jnp.abs(out_q.logits - out_fp.logits).mean()) / denom
+    assert err < 0.6, f"{arch}/{mode}: rel err {err}"
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b"])
+def test_pann_qat_grads(arch):
+    qc = QuantConfig(mode="pann", r=2.0, act_bits_tilde=6, qat=True)
+    cfg, params, tokens = _setup(arch, qc)
+    labels = tokens
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: MD.lm_loss(p, cfg, tokens, labels)))(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+    assert sum(float(jnp.abs(g).sum()) for g in leaves) > 0
+
+
+def test_pann_ruq_unsigned_equals_ruq():
+    """ruq and ruq_unsigned are the same numbers (Eq. 5-6 exactness)."""
+    a = QuantConfig(mode="ruq", weight_bits=6, act_bits=6)
+    b = QuantConfig(mode="ruq_unsigned", weight_bits=6, act_bits=6)
+    cfg_a, params, tokens = _setup("llama3-8b", a)
+    cfg_b = dataclasses.replace(cfg_a, quant=b)
+    oa = MD.forward(params, cfg_a, tokens, remat=False)
+    ob = MD.forward(params, cfg_b, tokens, remat=False)
+    np.testing.assert_array_equal(np.asarray(oa.logits),
+                                  np.asarray(ob.logits))
+
+
+def test_lower_power_more_error():
+    """Lower PANN budgets (smaller R) give larger logit error — the
+    power-accuracy trade-off is monotone end to end."""
+    errs = []
+    for r in [8.0, 1.0, 0.25]:
+        qc = QuantConfig(mode="pann", r=r, act_bits_tilde=8)
+        cfg, params, tokens = _setup("llama3-8b", qc)
+        cfg_fp = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+        oq = MD.forward(params, cfg, tokens, remat=False)
+        ofp = MD.forward(params, cfg_fp, tokens, remat=False)
+        errs.append(float(jnp.abs(oq.logits - ofp.logits).mean()))
+    assert errs[0] < errs[1] < errs[2], errs

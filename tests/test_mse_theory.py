@@ -1,0 +1,64 @@
+"""Validate the §5.3 quantization-error theory against Monte-Carlo simulation
+(the paper's Fig. 4 / Fig. 16 experiments)."""
+import numpy as np
+import pytest
+
+from repro.core import mse as m
+from repro.core import power as pw
+
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("bx,bw", [(4, 4), (6, 4), (8, 8), (3, 3)])
+def test_mse_ruq_matches_monte_carlo(bx, bw):
+    d = 512
+    theory = m.mse_ruq(d, bx, bw)
+    mc = m.mc_mse_ruq(RNG, d, bx, bw, n=4096)
+    assert mc == pytest.approx(theory, rel=0.25)
+
+
+@pytest.mark.parametrize("bx,r", [(4, 2.0), (6, 1.5), (8, 4.0)])
+def test_mse_pann_matches_monte_carlo(bx, r):
+    d = 512
+    theory = m.mse_pann(d, bx, r)
+    mc = m.mc_mse_pann(RNG, d, bx, r, n=4096)
+    assert mc == pytest.approx(theory, rel=0.3)
+
+
+def test_fig4_pann_beats_ruq_at_low_bits():
+    """Fig. 4: the MSE ratio RUQ/PANN exceeds 1 at low bit widths."""
+    for b in [2, 3, 4]:
+        assert m.mse_ratio_at_budget(b) > 1.0
+    # and RUQ becomes relatively better at high bit widths
+    assert m.mse_ratio_at_budget(8) < m.mse_ratio_at_budget(2)
+
+
+def test_optimal_bx_increases_with_power():
+    """Fig. 16: the optimal b~x grows with the power budget."""
+    budgets = [pw.p_mac_unsigned(b) for b in (2, 4, 8)]
+    bxs = [m.optimal_bx_tilde(p)[0] for p in budgets]
+    assert bxs == sorted(bxs)
+    assert bxs[-1] > bxs[0]
+
+
+def test_eq19_equals_eq18_after_substitution():
+    d, p = 128.0, 24.0
+    for bx in range(2, 9):
+        r = pw.pann_r_for_budget(p, bx)
+        if r <= 0:
+            continue
+        assert m.mse_pann_at_budget(d, p, bx) == pytest.approx(
+            m.mse_pann(d, bx, r))
+
+
+def test_gaussian_setting_qualitative():
+    """Fig. 4 right: in the Gaussian setting PANN also wins at low budgets."""
+    d = 256
+    b = 3
+    budget = pw.p_mac_unsigned(b)
+    bx, _ = m.optimal_bx_tilde(budget, d)
+    r = pw.pann_r_for_budget(budget, bx)
+    ruq = m.mc_mse_ruq(RNG, d, b, b, n=4096, dist="gauss")
+    pann = m.mc_mse_pann(RNG, d, bx, r, n=4096, dist="gauss")
+    assert pann < ruq

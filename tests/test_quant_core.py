@@ -1,0 +1,214 @@
+"""Quantizer + unsigned-split + PANN core properties (unit + property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pann, planner, quant
+from repro.core import power as pw
+from repro.core.unsigned import is_unsigned_exact, unsigned_matmul, unsigned_split
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# RUQ
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,signed", [(2, True), (4, True), (8, True),
+                                         (2, False), (4, False), (8, False)])
+def test_ruq_codes_in_range(bits, signed):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    if not signed:
+        x = jnp.abs(x)
+    q, s = quant.ruq(x, bits, signed)
+    qr = quant.qrange(bits, signed)
+    assert float(q.min()) >= qr.qmin and float(q.max()) <= qr.qmax
+    assert jnp.all(q == jnp.round(q))
+
+
+def test_ruq_error_bounded_by_half_step():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-1, 1, (128,)), jnp.float32)
+    q, s = quant.ruq(x, 6, signed=True)
+    err = jnp.abs(x - q * s)
+    assert float(err.max()) <= float(s.max()) * 0.5 + 1e-6
+
+
+def test_fake_quant_gradient_is_identity_in_range():
+    x = jnp.linspace(-0.5, 0.5, 11)
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, 4, signed=True)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g))
+
+
+def test_clip_calibration_beats_absmax_on_heavy_tails():
+    rng = np.random.default_rng(2)
+    x = rng.standard_t(df=2, size=8192).astype(np.float32)  # heavy tails
+    xj = jnp.asarray(x)
+    bits = 4
+    clip = quant.calibrate_clip(xj, bits, signed=True)
+    qc, sc = quant.clip_quant(xj, bits, signed=True, clip=clip)
+    qa, sa = quant.ruq(xj, bits, signed=True)
+    mse_clip = float(jnp.mean((xj - qc * sc) ** 2))
+    mse_abs = float(jnp.mean((xj - qa * sa) ** 2))
+    assert mse_clip < mse_abs
+
+
+def test_lsq_forward_and_grads():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(256), jnp.float32)
+    step = quant.lsq_init_step(x, 4, signed=True)
+    y = quant.lsq_quant(x, step, -8, 7)
+    assert y.shape == x.shape
+    dx, dstep = jax.grad(
+        lambda xx, ss: jnp.sum(quant.lsq_quant(xx, ss, -8, 7) ** 2),
+        argnums=(0, 1))(x, step)
+    assert jnp.isfinite(dstep)
+    assert jnp.all(jnp.isfinite(dx))
+    # gradient flows only inside the clipping range
+    big = jnp.full((4,), 100.0)
+    dbig = jax.grad(lambda xx: jnp.sum(quant.lsq_quant(xx, step, -8, 7)))(big)
+    np.testing.assert_allclose(np.asarray(dbig), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Unsigned split (Sec. 4) — exactness
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_unsigned_split_exact(d_in, d_out, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+    x = jnp.asarray(np.abs(rng.standard_normal((3, d_in))), jnp.float32)
+    assert is_unsigned_exact(x, w)
+    wp, wn = unsigned_split(w)
+    assert float(wp.min()) >= 0 and float(wn.min()) >= 0
+    np.testing.assert_allclose(np.asarray(wp - wn), np.asarray(w), rtol=1e-6)
+
+
+def test_unsigned_matmul_with_bias():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    x = jnp.abs(jnp.asarray(rng.standard_normal((4, 32)), jnp.float32))
+    np.testing.assert_allclose(np.asarray(unsigned_matmul(x, w, b)),
+                               np.asarray(x @ w + b), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# PANN quantization (Eq. 12) properties
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([0.5, 1.0, 2.0, 4.0]), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_pann_addition_budget_respected(r, seed):
+    """The realized addition factor ||w_q||_1 / d tracks the budget R."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    w_q, gamma = pann.pann_quantize(w, r, axis=0)
+    realized = pann.additions_per_element(w_q, axis=0)
+    # rounding keeps the per-channel addition factor within ~15% + abs slack
+    np.testing.assert_allclose(np.asarray(realized), r, rtol=0.15, atol=0.3)
+
+
+def test_pann_gamma_formula():
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.standard_normal((128, 8)), jnp.float32)
+    r = 2.0
+    gamma = pann.pann_gamma(w, r, axis=0)
+    want = np.abs(np.asarray(w)).sum(0, keepdims=True) / (r * w.shape[0])
+    np.testing.assert_allclose(np.asarray(gamma), want, rtol=1e-6)
+
+
+def test_pann_quantization_error_bounded():
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.standard_normal((512, 4)), jnp.float32)
+    w_q, gamma = pann.pann_quantize(w, 2.0, axis=0)
+    err = jnp.abs(w - w_q * gamma)
+    assert float((err <= 0.5 * gamma + 1e-7).all())
+
+
+def test_bitplane_decomposition_roundtrip():
+    rng = np.random.default_rng(13)
+    w = jnp.asarray(rng.integers(0, 30, (16, 8)), jnp.float32)
+    planes = pann.bitplane_decompose(w)
+    recon = sum((2 ** k) * planes[k].astype(jnp.float32)
+                for k in range(planes.shape[0]))
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(w))
+
+
+def test_bitplane_matmul_matches_dense():
+    rng = np.random.default_rng(14)
+    w = jnp.asarray(rng.integers(-12, 13, (32, 8)), jnp.float32)
+    x = jnp.asarray(rng.integers(0, 15, (4, 32)), jnp.float32)
+    pos, neg = unsigned_split(w)
+    n = pann.weight_storage_bits(w)
+    y = pann.bitplane_matmul(x, pann.bitplane_decompose(pos, n),
+                             pann.bitplane_decompose(neg, n))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+def test_pann_linear_qat_vs_ptq_paths_agree():
+    rng = np.random.default_rng(15)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    x = jnp.abs(jnp.asarray(rng.standard_normal((8, 64)), jnp.float32))
+    y_qat = pann.pann_linear(x, w, None, r=2.0, act_bits=6, qat=True)
+    y_ptq = pann.pann_linear(x, w, None, r=2.0, act_bits=6, qat=False)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_ptq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pann_bitplane_linear_matches_reference():
+    rng = np.random.default_rng(16)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    x = jnp.abs(jnp.asarray(rng.standard_normal((8, 64)), jnp.float32))
+    pwts = pann.pann_prepare(w, r=2.0, axis=0)
+    y_ref = pann.pann_matmul_reference(x, pwts, act_bits=6)
+    y_bp = pann.pann_bitplane_linear(x, pwts, act_bits=6)
+    np.testing.assert_allclose(np.asarray(y_bp), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pann_qat_weight_gradients_flow():
+    rng = np.random.default_rng(17)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    x = jnp.abs(jnp.asarray(rng.standard_normal((4, 32)), jnp.float32))
+    g = jax.grad(lambda ww: jnp.sum(
+        pann.pann_linear(x, ww, None, r=2.0, act_bits=6, qat=True) ** 2))(w)
+    assert float(jnp.abs(g).sum()) > 0
+    assert jnp.all(jnp.isfinite(g))
+
+
+# ---------------------------------------------------------------------------
+# Planner (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def test_planner_picks_argmax_of_eval():
+    budget = planner.budget_from_bits(4)  # 24 bit flips
+
+    def fake_eval(b, r):
+        return -abs(b - 5)  # pretend b~x = 5 is best
+
+    plan = planner.plan_with_eval(budget, fake_eval)
+    assert plan.b_x_tilde == 5
+    assert plan.r == pytest.approx(pw.pann_r_for_budget(budget, 5))
+
+
+def test_planner_theory_prefers_more_bits_at_higher_power():
+    lo = planner.plan_with_theory(planner.budget_from_bits(2))
+    hi = planner.plan_with_theory(planner.budget_from_bits(8))
+    assert hi.b_x_tilde >= lo.b_x_tilde
+
+
+def test_equal_power_curve_is_consistent():
+    for bits in [2, 4, 8]:
+        p = planner.budget_from_bits(bits)
+        for b, r in planner.equal_power_curve(bits):
+            assert pw.p_pann(r, b) == pytest.approx(p)
+
+
+def test_planner_rejects_tiny_budget():
+    with pytest.raises(ValueError):
+        planner.plan_with_eval(0.5, lambda b, r: 0.0)

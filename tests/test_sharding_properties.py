@@ -1,0 +1,142 @@
+"""Property tests (hypothesis) on the sharding rules and power models —
+the invariants the 512-chip dry-run relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import power as pw
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_local_mesh
+
+# ---------------------------------------------------------------------------
+# greedy_spec invariants
+# ---------------------------------------------------------------------------
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Mesh-shaped stand-in exposing .shape/.axis_names like a real Mesh
+    (class bodies can't close over function locals, so use type())."""
+    return type("FakeMesh", (), {
+        "axis_names": axes,
+        "size": int(np.prod(shape)),
+        "shape": dict(zip(axes, shape)),
+    })
+
+
+@given(st.lists(st.sampled_from([1, 2, 3, 8, 16, 24, 32, 128, 522, 4096,
+                                 32768]), min_size=1, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_greedy_spec_divisibility_and_uniqueness(dims):
+    mesh = _fake_mesh()
+    spec = SH.greedy_spec(tuple(dims), mesh)
+    used = []
+    for dim, assignment in zip(dims, spec):
+        if assignment is None:
+            continue
+        names = assignment if isinstance(assignment, tuple) else (assignment,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        assert dim % size == 0, (dims, spec)
+        used.extend(names)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
+
+
+def test_greedy_spec_prefers_batch():
+    mesh = _fake_mesh()
+    spec = SH.greedy_spec((128, 32768, 8, 128), mesh)
+    assert spec[0] == ("data",) or spec[0] == "data"
+
+
+def test_cache_specs_never_shard_group_stack():
+    mesh = _fake_mesh()
+    tree = {"groups": (jax.ShapeDtypeStruct((32, 128, 1024, 8, 128),
+                                            jnp.bfloat16),),
+            "tail": [jax.ShapeDtypeStruct((128, 1024, 8, 128),
+                                          jnp.bfloat16)]}
+    specs = SH.cache_specs(tree, mesh)
+    assert specs["groups"][0][0] is None          # stack dim unsharded
+    assert specs["tail"][0][0] is not None        # batch still sharded
+
+
+# ---------------------------------------------------------------------------
+# param rule invariants
+# ---------------------------------------------------------------------------
+
+def test_param_specs_col_row_duality():
+    from repro import configs
+    from repro.models import model as MD
+    from repro.configs.base import ParallelConfig
+    cfg = configs.get_config("llama3-8b")
+    shapes = jax.eval_shape(lambda k: MD.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    mesh = _fake_mesh()
+    specs = SH.param_specs(shapes, mesh, ParallelConfig(fsdp=True))
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+
+    def find(substr):
+        out = []
+        for path, s in flat:
+            key = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                           for k in path)
+            if substr in key:
+                out.append((key, s))
+        return out
+
+    for key, s in find("wq/w"):
+        assert s[-1] == "model", (key, s)          # column-parallel
+    for key, s in find("wo/w"):
+        assert s[-2] == "model", (key, s)          # row-parallel
+    for key, s in find("w_down/w"):
+        assert s[-2] == "model", (key, s)
+    for key, s in find("norm1"):
+        assert all(x is None for x in s), (key, s)  # norms replicated
+    # every sharded dim divides the axis size
+    shape_flat = {"/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                           for k in path): l.shape
+                  for path, l in
+                  jax.tree_util.tree_flatten_with_path(shapes)[0]}
+    for path, s in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                       for k in path)
+        for dim, a in zip(shape_flat[key], tuple(s) + (None,) * 8):
+            if a is not None:
+                size = mesh.shape[a] if isinstance(a, str) else \
+                    int(np.prod([mesh.shape[x] for x in a]))
+                assert dim % size == 0, (key, s, shape_flat[key])
+
+
+# ---------------------------------------------------------------------------
+# power model properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_unsigned_never_worse_than_signed(b):
+    assert pw.p_mac_unsigned(b) <= pw.p_mac_signed(b, 32)
+
+
+@given(st.integers(2, 12), st.integers(2, 12))
+@settings(max_examples=50, deadline=None)
+def test_mixed_width_bounded_by_square(b_w, b_x):
+    m = max(b_w, b_x)
+    assert pw.p_mult_mixed(b_w, b_x) <= pw.p_mult_signed(m) + 1e-9
+    assert pw.p_mult_mixed(m, m) == pytest.approx(pw.p_mult_signed(m))
+
+
+@given(st.floats(0.25, 16.0), st.integers(2, 8))
+@settings(max_examples=50, deadline=None)
+def test_pann_power_monotone_in_r_and_bits(r, b):
+    assert pw.p_pann(r + 0.5, b) > pw.p_pann(r, b)
+    assert pw.p_pann(r, b + 1) > pw.p_pann(r, b)
+
+
+@given(st.floats(6.0, 200.0))
+@settings(max_examples=50, deadline=None)
+def test_budget_inversion_roundtrip(p):
+    for b in range(2, 9):
+        r = pw.pann_r_for_budget(p, b)
+        if r > 0:
+            assert pw.p_pann(r, b) == pytest.approx(p, rel=1e-9)
