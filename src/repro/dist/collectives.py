@@ -1,0 +1,50 @@
+"""Compressed cross-replica gradient reduction.
+
+``compressed_psum_mean`` simulates an int8 wire format for the data-parallel
+gradient all-reduce with *error feedback* (Karimireddy et al., 2019): each
+round adds the residual it failed to transmit last round before quantizing,
+so the quantization bias telescopes away and the running average of the
+compressed means converges on the true mean. Runs inside ``shard_map`` over
+the reduction axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Hashable
+
+import jax
+import jax.numpy as jnp
+
+_WIRE_MAX = 127.0  # int8 symmetric code range
+
+
+def _compress_one(g: jax.Array, err: jax.Array, axis_name: Hashable
+                  ) -> tuple[jax.Array, jax.Array]:
+    val = g.astype(jnp.float32) + err.astype(jnp.float32)
+    # shared scale: one extra scalar pmax, so every shard's codes dequantize
+    # identically and the mean of codes is the code of the mean
+    amax = jax.lax.pmax(jnp.max(jnp.abs(val)), axis_name)
+    scale = jnp.maximum(amax, 1e-30) / _WIRE_MAX
+    codes = jnp.clip(jnp.round(val / scale), -_WIRE_MAX, _WIRE_MAX)
+    codes = codes.astype(jnp.int8)                    # the wire payload
+    deq = codes.astype(jnp.float32) * scale
+    mean = jax.lax.pmean(deq, axis_name)
+    new_err = val - deq                               # residual stays local
+    return mean.astype(g.dtype), new_err.astype(err.dtype)
+
+
+def compressed_psum_mean(grads: Any, err: Any, axis_name: Hashable
+                         ) -> tuple[Any, Any]:
+    """int8-compressed mean over ``axis_name`` with error feedback.
+
+    ``grads``/``err`` are matching pytrees of per-shard arrays. Returns
+    (mean tree — replicated, new error-feedback tree — per shard).
+    """
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    means, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = _compress_one(g, e, axis_name)
+        means.append(m)
+        errs.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, means),
+            jax.tree_util.tree_unflatten(treedef, errs))

@@ -1,0 +1,50 @@
+"""Forward-compatibility shims for jax APIs the repo programs against.
+
+The distribution substrate is written against the modern ``jax.shard_map``
+entry point (mesh/in_specs/out_specs keywords, ``check_vma``). Older jax
+releases (<= 0.4.x) only ship ``jax.experimental.shard_map.shard_map`` with a
+``check_rep`` keyword. ``shard_map`` below accepts the modern signature and
+dispatches to whichever implementation exists; importing ``repro.dist``
+installs it as ``jax.shard_map`` when the attribute is missing, so call sites
+(and tests) can use one spelling everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+try:  # pragma: no cover - depends on the installed jax
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+except ImportError:  # pragma: no cover
+    _legacy_shard_map = None
+
+_NATIVE = getattr(jax, "shard_map", None)
+
+
+def shard_map(f: Callable, mesh: Any = None, in_specs: Any = None,
+              out_specs: Any = None, check_vma: bool | None = None,
+              check_rep: bool | None = None, **kwargs) -> Callable:
+    """Modern-signature shard_map that runs on old and new jax alike."""
+    check = True
+    if check_vma is not None:
+        check = check_vma
+    elif check_rep is not None:
+        check = check_rep
+    if _NATIVE is not None:
+        try:
+            return _NATIVE(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=check, **kwargs)
+        except TypeError:  # native API predates check_vma
+            return _NATIVE(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=check, **kwargs)
+    if _legacy_shard_map is None:  # pragma: no cover
+        raise ImportError("no shard_map implementation available in this jax")
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check)
+
+
+def install() -> None:
+    """Expose :func:`shard_map` as ``jax.shard_map`` on old jax releases."""
+    if getattr(jax, "shard_map", None) is None:
+        jax.shard_map = shard_map

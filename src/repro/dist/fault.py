@@ -1,0 +1,101 @@
+"""Fault tolerance: straggler telemetry and checkpoint/restart supervision.
+
+``StepMonitor`` keeps a running baseline of healthy step times and flags any
+step slower than ``threshold`` x the baseline (SDC / preemption / slow-host
+detection at the trainer level). ``Supervisor`` wraps a step loop with
+periodic checkpointing and restart-from-latest-checkpoint on crashes — the
+single-process stand-in for the pod-level supervisor that restarts failed
+workers against the same checkpoint stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+
+class StepMonitor:
+    """Flags straggler steps against a running mean of healthy steps."""
+
+    def __init__(self, warmup: int = 5, threshold: float = 2.0):
+        self.warmup = warmup
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.stragglers = 0
+        self._baseline_sum = 0.0
+        self._baseline_n = 0
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Record one step duration; True iff the step is a straggler."""
+        flagged = False
+        if self._baseline_n >= self.warmup:
+            baseline = self._baseline_sum / self._baseline_n
+            flagged = seconds > self.threshold * baseline
+        if flagged:
+            self.stragglers += 1
+        else:  # stragglers don't poison the baseline
+            self._baseline_sum += seconds
+            self._baseline_n += 1
+        self.times.append(seconds)
+        return flagged
+
+    def summary(self) -> dict:
+        n = len(self.times)
+        mean = (self._baseline_sum / self._baseline_n
+                if self._baseline_n else 0.0)
+        return {
+            "steps_recorded": n,
+            "stragglers": self.stragglers,
+            "mean_step_s": round(mean, 6),
+            "max_step_s": round(max(self.times), 6) if self.times else 0.0,
+        }
+
+
+class Supervisor:
+    """Run a step loop with periodic checkpoints; on a crash, restore from
+    the newest checkpoint and continue.
+
+    At-least-once semantics: a crash replays the (up to ``ckpt_every - 1``)
+    steps since the last checkpoint, and a crash before the first checkpoint
+    re-runs ``init_fn`` from step 0 — ``step_fn`` side effects must be
+    idempotent or keyed by step. The *state* trajectory is exact: the final
+    state equals an uninterrupted run's."""
+
+    def __init__(self, ckpt_dir: str, ckpt_every: int = 5,
+                 max_restarts: int = 3, backoff_s: float = 0.0):
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.backoff_s = backoff_s
+        self.restarts = 0
+
+    def run(self, total_steps: int, *,
+            init_fn: Callable[[], Any],
+            resume_fn: Callable[[int], Any],
+            step_fn: Callable[[Any, int], Any],
+            save_fn: Callable[[Any, int], None]) -> Any:
+        from repro.ckpt import checkpoint as ck
+
+        state = init_fn()
+        step = 0
+        while step < total_steps:
+            try:
+                while step < total_steps:
+                    state = step_fn(state, step)
+                    step += 1
+                    if step % self.ckpt_every == 0:
+                        save_fn(state, step)
+                return state
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                if self.backoff_s:
+                    time.sleep(self.backoff_s)
+                last: Optional[int] = ck.latest_step(self.ckpt_dir)
+                if last is None:
+                    state = init_fn()
+                    step = 0
+                else:
+                    state = resume_fn(last)
+                    step = last
+        return state

@@ -1,0 +1,93 @@
+"""Expert-parallel capacity routing for MoE layers.
+
+The baseline ``repro.models.mlp.apply_moe`` scans over experts and runs every
+expert on every token (E/k redundant FLOPs). This module implements the
+GShard/Switch capacity dispatch: tokens are gathered into an
+(experts, capacity, d) buffer, each expert runs only on its own tokens, and
+the expert dim is sharded over the mesh so experts compute in parallel.
+Wherever no token overflows capacity the result is numerically identical to
+the dense scan (tested in tests/test_moe.py).
+
+Sharding is expressed with explicit NamedShardings (not the ambient-mesh
+constraint wrappers) so the function also works eagerly outside a ``with
+mesh:`` block, e.g. under ``jax.grad`` in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.constrain import _ok
+from repro.models import mlp as M
+
+Array = jax.Array
+
+
+def _constrain(x: Array, mesh: Mesh, entries: tuple) -> Array:
+    """with_sharding_constraint with per-dim divisibility guards."""
+    checked = [name if name is not None and _ok(mesh, name, dim) else None
+               for dim, name in zip(x.shape, entries)]
+    if all(e is None for e in checked):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*checked)))
+
+
+def apply_moe_capacity(x: Array, p: dict, cfg: ModelConfig, mesh: Mesh
+                       ) -> tuple[Array, Array]:
+    """x: (B, T, d) -> (y, aux_loss), matching ``mlp.apply_moe`` semantics.
+
+    Experts are parallelized over the "data" axis (expert-parallelism reuses
+    the DP axis: gradients are already reduced over it) and each expert's
+    hidden dim is TP-sharded over "model" (inside ``mlp.expert_ffn``). When
+    the expert count doesn't divide the axis (mixtral: 8 experts on a
+    16-wide axis) the capacity dim is sharded instead, so the dispatch still
+    computes in parallel. Tokens beyond an expert's capacity
+    ``ceil(cf * n_tokens * top_k / E)`` are dropped (their residual passes
+    through), exactly as in GShard.
+    """
+    assert cfg.moe is not None
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    b, t, d = x.shape
+    n = b * t
+
+    gates, mask, aux = M.route(x, p, cfg)   # shared router + aux loss
+
+    capacity = int(math.ceil(cfg.moe.capacity_factor * n * k / e))
+    capacity = max(1, min(capacity, n))
+
+    xf = x.reshape(n, d)
+    gates_f = gates.reshape(n, e).astype(x.dtype)
+    mask_f = mask.reshape(n, e)
+    # position of each token within its expert's buffer, in token order
+    pos = jnp.cumsum(mask_f.astype(jnp.int32), axis=0) - 1
+    keep = mask_f & (pos < capacity)
+    disp = (keep[..., None].astype(x.dtype)
+            * jax.nn.one_hot(jnp.where(keep, pos, 0), capacity,
+                             dtype=x.dtype))                    # (n, E, C)
+
+    xe = jnp.einsum("nec,nd->ecd", disp, xf)                    # (E, C, d)
+    # prefer sharding the expert dim ("data" doubles as the EP axis); when E
+    # doesn't divide it (e.g. mixtral's 8 experts on a 16-wide axis), fall
+    # back to sharding capacity so the dispatch still computes in parallel
+    if _ok(mesh, "data", e):
+        ep_entries = ("data", None, None)
+    elif _ok(mesh, "data", capacity):
+        ep_entries = (None, "data", None)
+    else:
+        ep_entries = (None, None, None)
+    xe = _constrain(xe, mesh, ep_entries)
+
+    ye = jax.vmap(lambda xe_e, wg, wu, wd: M.expert_ffn(xe_e, wg, wu, wd,
+                                                        cfg))(
+        xe, p["w_gate"], p["w_up"], p["w_down"])
+    ye = _constrain(ye, mesh, ep_entries)
+
+    combine = disp * gates_f[..., None]                         # (n, E, C)
+    y = jnp.einsum("nec,ecd->nd", combine, ye)
+    return y.reshape(b, t, d).astype(x.dtype), aux

@@ -87,10 +87,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
     return out
 
 
-def batch_shardings(batch: dict, mesh, shape: ShapeConfig) -> dict:
+def batch_shardings(batch: dict, mesh) -> dict:
     out = {}
     for k, v in batch.items():
-        out[k] = NamedSharding(mesh, SH.input_sharding(mesh, shape, v.shape))
+        out[k] = NamedSharding(mesh, SH.input_sharding(mesh, v.shape))
     return out
 
 
@@ -115,6 +115,15 @@ def _bytes_of_hlo_shape(text: str) -> int:
                 n *= int(d)
         total += n * DTYPE_BYTES[dt]
     return total
+
+
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax, a one-element
+    list of dicts on older releases; normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def collective_bytes(hlo_text: str) -> dict[str, float]:
@@ -146,7 +155,7 @@ def _jit_train(cfg, shape, mesh, par) -> tuple[Any, tuple, dict]:
         step=P())
     state_sh = SH.to_named(state_specs, mesh)
     batch = input_specs(cfg, shape)
-    batch_sh = batch_shardings(batch, mesh, shape)
+    batch_sh = batch_shardings(batch, mesh)
 
     def fn(state, batch):
         return ST.train_step(state, batch, cfg=cfg, tcfg=tcfg, par=par)
@@ -162,7 +171,7 @@ def _jit_prefill(cfg, shape, mesh, par):
     pspecs = SH.param_specs(params_shapes, mesh, par)
     params_sh = SH.to_named(pspecs, mesh)
     batch = input_specs(cfg, shape)
-    batch_sh = batch_shardings(batch, mesh, shape)
+    batch_sh = batch_shardings(batch, mesh)
 
     def fn(params, batch):
         return ST.prefill_step(params, cfg, batch["tokens"],
@@ -199,7 +208,7 @@ def _jit_decode(cfg, shape, mesh, par, serve_quant: bool = False):
     dspecs = SH.cache_specs(state_shapes, mesh)   # greedy; scalars -> P()
     state_sh = SH.to_named(dspecs, mesh)
     tokens_sh = NamedSharding(mesh, SH.input_sharding(
-        mesh, shape, batch["tokens"].shape))
+        mesh, batch["tokens"].shape))
 
     def fn(params, state, tokens):
         return ST.serve_step(params, cfg, state, tokens)
@@ -236,7 +245,7 @@ def _probe_metrics(cfg, shape, mesh, par, n_layers, enc_layers=None,
             jitted, args, _ = _jit_decode(pcfg, shape, mesh, par,
                                           serve_quant=serve_quant)
         compiled = jitted.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -284,15 +293,25 @@ def probe_extrapolate(cfg, shape, mesh, par, serve_quant: bool = False
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              quant_mode: str = "none", verbose: bool = True,
              probe: bool = True,
-             extra_parallel: Optional[dict] = None) -> dict:
-    """Lower + compile one cell; return the roofline record."""
+             extra_parallel: Optional[dict] = None,
+             reduced: bool = False) -> dict:
+    """Lower + compile one cell; return the roofline record.
+
+    ``reduced`` swaps in the tiny same-family config so the full 512-device
+    lower+compile pipeline can be smoke-tested on a CPU container (the mesh,
+    sharding rules, and HLO parsing are identical — only widths shrink).
+    """
     mesh = make_production_mesh(multi_pod=multi_pod)
     shape = configs.SHAPES_BY_NAME[shape_name]
     serve_quant = quant_mode == "pann_serve"
     qc = QuantConfig(mode="none" if serve_quant else quant_mode,
                      qat=(shape.kind == "train"))
     cfg = configs.get_config(arch, dtype="bfloat16", quant=qc)
+    # parallel strategy comes from the FULL config so reduced smoke runs
+    # compile the same (FSDP or not) sharding path as the real cell
     par = parallel_for(cfg, shape.kind)
+    if reduced:
+        cfg = configs.reduced(cfg)
     if extra_parallel:
         extra = dict(extra_parallel)
         moe_impl = extra.pop("moe_impl", None)
@@ -305,8 +324,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
 
     if shape.name == "long_500k" and not cfg.supports_long_context:
-        return {"arch": arch, "shape": shape_name, "skipped":
-                "pure full attention (DESIGN.md §5)"}
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": "pure full attention (DESIGN.md §5)"}
 
     t0 = time.time()
     with mesh:
@@ -324,7 +344,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t1 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     n_dev = mesh.size
@@ -391,6 +411,15 @@ def main() -> None:
                     choices=["none", "ruq", "ruq_unsigned", "pann",
                              "pann_serve"])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family configs (CPU smoke of the full "
+                         "512-device lower/compile path)")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the unrolled FLOPs extrapolation probes")
+    ap.add_argument("--retry-failed-probes", action="store_true",
+                    help="re-run cells whose record carries probe_error "
+                         "(by default they count as done to avoid "
+                         "recompiling deterministic failures every run)")
     ap.add_argument("--out", default="benchmarks/results")
     args = ap.parse_args()
 
@@ -403,25 +432,43 @@ def main() -> None:
         cells = [(args.arch, args.shape)]
 
     os.makedirs(args.out, exist_ok=True)
-    tag = args.mesh + ("" if args.quant == "none" else f"_{args.quant}")
+    tag = args.mesh + ("" if args.quant == "none" else f"_{args.quant}") \
+        + ("_reduced" if args.reduced else "")
     path = os.path.join(args.out, f"dryrun_{tag}.json")
 
-    # resumable: skip cells already recorded, write after every cell
+    # resumable: skip cells already recorded, write after every cell. A cell
+    # only counts as done if it already has what THIS invocation would add:
+    # when probing is requested, a record lowered without probe data is
+    # re-run (so a --no-probe fast pass can be upgraded later). Stale
+    # records are only replaced once their re-run SUCCEEDS — a crash or
+    # failure mid-upgrade never destroys previously recorded results.
+    def cell_complete(r) -> bool:
+        if "skipped" in r:
+            return True
+        if r.get("mesh", "single") == "single" and not args.no_probe:
+            return ("flops_per_device_corrected" in r
+                    or ("probe_error" in r
+                        and not args.retry_failed_probes))
+        return True
+
+    def rec_key(r):
+        return (r["arch"], r["shape"], r.get("mesh", "single"))
+
     records, failures = [], []
     if os.path.exists(path):
         with open(path) as f:
             prev = json.load(f)
         records = prev.get("records", [])
         print(f"[dryrun] resuming: {len(records)} records already present")
-    done = {(r["arch"], r["shape"], r.get("mesh", "single"))
-            for r in records if "skipped" not in r}
-    done |= {(r["arch"], r["shape"], "single") for r in records
-             if "skipped" in r}
+    done = {rec_key(r) for r in records if cell_complete(r)}
 
     def flush():
-        with open(path, "w") as f:
+        # atomic: a crash mid-write must never corrupt the resume file
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump({"records": records, "failures": failures}, f,
                       indent=1)
+        os.replace(tmp, path)
 
     for arch, shape in cells:
         for mp in meshes:
@@ -430,8 +477,12 @@ def main() -> None:
                 continue
             try:
                 # FLOPs probes feed the single-pod roofline table only
-                records.append(run_cell(arch, shape, mp, args.quant,
-                                        probe=not mp))
+                rec = run_cell(arch, shape, mp, args.quant,
+                               probe=not mp and not args.no_probe,
+                               reduced=args.reduced)
+                records[:] = [r for r in records if rec_key(r) != key]
+                records.append(rec)
+                done.add(key)
             except Exception as e:  # noqa: BLE001 — report, keep going
                 failures.append((arch, shape, mp, repr(e)[:400]))
                 print(f"[dryrun][FAIL] {arch} x {shape} x "

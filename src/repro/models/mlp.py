@@ -82,32 +82,49 @@ def router_topk(logits: Array, top_k: int) -> tuple[Array, Array]:
     return gates, mask
 
 
-def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:
-    """x: (B, T, d) -> (y, aux_loss). Scan over experts (see module doc)."""
+def route(x: Array, p: dict, cfg: ModelConfig
+          ) -> tuple[Array, Array, Array]:
+    """Shared router: (gates, mask, aux_loss). Both the dense scan and the
+    expert-parallel capacity path (repro.dist.moe_ep) call this, so the
+    Switch-style load-balance loss E * sum_e f_e * p_e is one definition.
+    """
     assert cfg.moe is not None
-    qc = cfg.quant
     e = cfg.moe.num_experts
-    logits = L.apply_linear(x, p["router"], qc).astype(jnp.float32)
+    logits = L.apply_linear(x, p["router"], cfg.quant).astype(jnp.float32)
     gates, mask = router_topk(logits, cfg.moe.top_k)
-
-    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
     probs_full = jax.nn.softmax(logits, axis=-1)
     f = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))        # fraction routed
     pbar = jnp.mean(probs_full, axis=(0, 1))
     aux = e * jnp.sum(f * pbar)
+    return gates, mask, aux
 
+
+def expert_ffn(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+               cfg: ModelConfig) -> Array:
+    """One expert's gated FFN. The single definition shared by the dense
+    scan below and the capacity-dispatch path (repro.dist.moe_ep), which
+    must stay numerically identical to it."""
+    qc = cfg.quant
     act = jax.nn.silu if cfg.activation in ("swiglu", "geglu") else \
         _act(cfg.activation)
+    h = act(L.qlinear(x, w_gate.astype(x.dtype), None, qc)) \
+        * L.qlinear(x, w_up.astype(x.dtype), None, qc)
+    # pin TP sharding: propagation dies through the scan-sliced / vmapped
+    # expert weights and GSPMD otherwise computes the FULL d_ff per device
+    # (measured 16x FLOP bloat; EXPERIMENTS.md §Perf iteration 3a)
+    h = C.constrain_axis(h, -1, "model")
+    return L.qlinear(h, w_down.astype(x.dtype), None, qc)
+
+
+def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:
+    """x: (B, T, d) -> (y, aux_loss). Scan over experts (see module doc)."""
+    assert cfg.moe is not None
+    e = cfg.moe.num_experts
+    gates, _, aux = route(x, p, cfg)
 
     def expert_step(carry, ew):
         w_gate, w_up, w_down, gate_e = ew
-        h = act(L.qlinear(x, w_gate.astype(x.dtype), None, qc)) \
-            * L.qlinear(x, w_up.astype(x.dtype), None, qc)
-        # pin TP sharding: propagation dies through the scan-sliced expert
-        # weights and GSPMD otherwise computes the FULL d_ff per device
-        # (measured 16x FLOP bloat; EXPERIMENTS.md §Perf iteration 3a)
-        h = C.constrain_axis(h, -1, "model")
-        y_e = L.qlinear(h, w_down.astype(x.dtype), None, qc)
+        y_e = expert_ffn(x, w_gate, w_up, w_down, cfg)
         return carry + gate_e[..., None].astype(x.dtype) * y_e, None
 
     gates_t = jnp.moveaxis(gates, -1, 0)                        # (E, B, T)

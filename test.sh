@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point. Runs the suite on the host CPU; multi-device
+# tests fork their own subprocesses with a larger forced device count, so
+# THIS process must keep the default (1 device) — do not raise it here.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest "$@"  # e.g.: bash test.sh tests/test_moe.py -x

@@ -1,0 +1,102 @@
+"""Minimal deterministic stand-in for `hypothesis`, used only when the real
+package is not installed (this container ships no hypothesis and nothing may
+be pip-installed). It implements exactly the surface the test-suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers / st.floats / st.sampled_from / st.lists
+
+`given` draws `max_examples` pseudo-random examples from a fixed seed (plus
+the boundary example first), so runs are reproducible. Shrinking, databases,
+deadlines etc. are not implemented — `settings` only reads `max_examples`.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random, boundary: bool = False):
+        return self._draw(rng, boundary)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng, b: min_value if b
+                     else rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng, b: min_value if b
+                     else rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng, b: seq[0] if b else rng.choice(seq))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, b: False if b else rng.random() < 0.5)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng, boundary):
+        size = min_size if boundary else rng.randint(min_size, max_size)
+        return [elements.example(rng, boundary) for _ in range(size)]
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples",
+                               _DEFAULT_MAX_EXAMPLES)
+
+        def runner():
+            rng = random.Random(0)
+            for i in range(max_examples):
+                args = [s.example(rng, boundary=(i == 0))
+                        for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis): "
+                        f"{fn.__name__}{tuple(args)!r}") from err
+
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the wrapped function's strategy parameters.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco
+
+
+def install() -> None:
+    """Register stub `hypothesis` / `hypothesis.strategies` in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "booleans"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

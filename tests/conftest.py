@@ -1,0 +1,12 @@
+"""Shared test setup: fall back to the vendored hypothesis stub when the
+real package is absent (nothing may be pip-installed in this container)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when available)
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()

@@ -1,0 +1,47 @@
+"""The 512-chip dry-run must run end-to-end on this CPU container.
+
+Runs the real CLI in a subprocess (the launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax,
+so it must own its process) with --reduced configs: the mesh construction,
+greedy sharding, SPMD lowering/compile, HLO collective parsing, and the
+resumable JSON output all execute for real — only the layer widths shrink.
+"""
+import json
+import os
+import subprocess
+import sys
+
+ENV = {**os.environ,
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+ENV.pop("XLA_FLAGS", None)  # the dryrun module sets its own
+
+
+def test_dryrun_cli_end_to_end(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "llama3-8b", "--shape", "train_4k", "--mesh", "single",
+         "--reduced", "--no-probe", "--out", str(tmp_path)],
+        env=ENV, capture_output=True, text=True, timeout=560,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+
+    path = tmp_path / "dryrun_single_reduced.json"
+    assert path.exists(), out.stdout[-2000:]
+    rec = json.loads(path.read_text())
+    assert not rec["failures"], rec["failures"]
+    (cell,) = rec["records"]
+    assert cell["arch"] == "llama3-8b" and cell["n_devices"] == 256
+    # the roofline inputs were extracted from the compiled artifact
+    assert cell["flops_per_device"] > 0
+    assert cell["collective_bytes_per_device"]["total"] > 0
+    assert cell["temp_size_in_bytes"] > 0
+
+    # resumability: a second invocation must skip the recorded cell
+    again = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "llama3-8b", "--shape", "train_4k", "--mesh", "single",
+         "--reduced", "--no-probe", "--out", str(tmp_path)],
+        env=ENV, capture_output=True, text=True, timeout=120,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert again.returncode == 0, again.stderr[-2000:]
+    assert "resuming: 1 records already present" in again.stdout

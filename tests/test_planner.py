@@ -1,0 +1,63 @@
+"""Algorithm-1 planner edge cases: budgets too small for any bit width, and
+the PannPlan.describe round-trip of the chosen (b~x, R)."""
+import re
+
+import pytest
+
+from repro.core import planner
+from repro.core import power as pw
+
+
+def test_candidate_bit_widths_empty_below_minimum_budget():
+    """A power budget below the cheapest (2-bit) PANN configuration leaves
+    no candidate: p_pann(R -> 0, b=2) is the floor."""
+    floor = pw.p_pann(0.05, 2)
+    assert planner.candidate_bit_widths(floor * 0.5) == []
+    # just above the floor, at least the smallest width qualifies
+    assert 2 in planner.candidate_bit_widths(pw.p_pann(1.0, 2))
+
+
+def test_candidate_bit_widths_monotone_in_budget():
+    """Raising the budget never removes a candidate."""
+    budgets = [planner.budget_from_bits(b) for b in (2, 4, 8)]
+    cands = [set(planner.candidate_bit_widths(p)) for p in budgets]
+    assert cands[0] <= cands[1] <= cands[2]
+    assert cands[-1], "an 8-bit-MAC budget must admit some bit width"
+
+
+def test_planners_raise_on_impossible_budget():
+    with pytest.raises(ValueError, match="too small"):
+        planner.plan_with_theory(0.01)
+    with pytest.raises(ValueError, match="too small"):
+        planner.plan_with_eval(0.01, lambda b, r: 1.0)
+
+
+def test_plan_with_eval_empty_range_raises():
+    p = planner.budget_from_bits(4)
+    with pytest.raises(ValueError):
+        planner.plan_with_eval(p, lambda b, r: 1.0, b_range=())
+
+
+def test_describe_roundtrip_of_chosen_parameters():
+    plan = planner.plan_with_theory(planner.budget_from_bits(4))
+    text = plan.describe()
+    m = re.search(r"b~x=(\d+), R=([0-9.]+)", text)
+    assert m, text
+    assert int(m.group(1)) == plan.b_x_tilde
+    assert float(m.group(2)) == pytest.approx(plan.r, abs=5e-3)
+    # the described budget matches too
+    mb = re.search(r"P=([0-9.]+)", text)
+    assert float(mb.group(1)) == pytest.approx(plan.power_budget, abs=0.05)
+    # and the chosen pair actually meets the budget (Eq. 13 inversion)
+    assert pw.p_pann(plan.r, plan.b_x_tilde) == \
+        pytest.approx(plan.power_budget, rel=1e-6)
+
+
+def test_plan_with_eval_picks_argmax():
+    p = planner.budget_from_bits(4)
+    cands = planner.candidate_bit_widths(p)
+    best = cands[len(cands) // 2]
+    plan = planner.plan_with_eval(p, lambda b, r: 1.0 - abs(b - best))
+    assert plan.b_x_tilde == best
+    assert plan.score == pytest.approx(1.0)
+    assert len(plan.candidates) == len(cands)
