@@ -1,0 +1,177 @@
+"""End-to-end power-accuracy traversal benchmark for repro.serve_engine.
+
+Builds one ServeEngine with a ladder of equal-power PANN operating points,
+then (a) sweeps each rung with a pinned request batch to measure tokens/sec
+and estimated energy/token, and (b) replays a synthetic MIXED-budget request
+stream to demonstrate per-request traversal in a single process (no
+re-quantization, no recompilation — asserted, not just claimed).
+
+    PYTHONPATH=src python benchmarks/serve_traversal.py --reduced --check
+
+``--check`` gates against the committed baseline snapshot
+(benchmarks/baselines/serve_traversal.json): any rung regressing tokens/sec
+by more than 30% fails the run (CI uploads the fresh JSON as an artifact).
+Refresh the baseline by copying benchmarks/results/serve_traversal.json over
+it when the hardware or the engine legitimately changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import common  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.configs.base import QuantConfig  # noqa: E402
+from repro.models import model as MD  # noqa: E402
+from repro.serve_engine import Request, ServeEngine  # noqa: E402
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "serve_traversal.json")
+REGRESSION_TOLERANCE = 0.30
+
+
+def _make_requests(rng, cfg, n, prompt_len, gen, budgets):
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        prompt_len).astype(np.int32),
+                    max_new_tokens=gen,
+                    power_budget_bits=budgets[i % len(budgets)])
+            for i in range(n)]
+
+
+def _timed_generate(engine, reqs, repeats=2):
+    """Best-of-N wall time (the engine is warm; first call is not special).
+    Also returns the rung switches of the LAST repeat alone, so callers
+    report per-stream switching, not the engine's lifetime counter."""
+    best, responses, last_switches = None, None, 0
+    for _ in range(repeats):
+        s0 = engine.rung_switches
+        t0 = time.monotonic()
+        responses = engine.generate(reqs)
+        dt = time.monotonic() - t0
+        last_switches = engine.rung_switches - s0
+        best = dt if best is None else min(best, dt)
+    n_tok = sum(len(r.tokens) for r in responses)
+    return n_tok / max(best, 1e-9), responses, last_switches
+
+
+def run(args) -> dict:
+    cfg = configs.get_config(args.arch, quant=QuantConfig(mode="none"))
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    ladder_bits = [int(b) for b in args.ladder.split(",")]
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
+                         max_batch=args.batch,
+                         max_len=args.prompt_len + args.gen)
+    engine.warmup()
+    rng = np.random.default_rng(args.seed)
+
+    rungs = []
+    for op in engine.ladder:
+        reqs = _make_requests(rng, cfg, args.batch, args.prompt_len,
+                              args.gen, [op.bits])
+        tps, responses, _ = _timed_generate(engine, reqs)
+        meta = responses[0].metadata
+        rungs.append({
+            "bits": op.bits, "b_x_tilde": op.b_x_tilde, "r": round(op.r, 4),
+            "power_per_weight_mac": op.power,
+            "tok_per_s": round(tps, 1),
+            "est_gbitflips_per_token": meta["est_gbitflips_per_token"],
+        })
+        common.emit(f"serve_traversal/rung{op.bits}b", 1e6 / max(tps, 1e-9),
+                    f"tok/s={tps:.1f}")
+
+    mixed_reqs = _make_requests(rng, cfg, args.requests, args.prompt_len,
+                                args.gen, ladder_bits)
+    tps, responses, mixed_switches = _timed_generate(engine, mixed_reqs)
+    engine.assert_no_recompile()
+    served_bits = sorted({r.rung_bits for r in responses})
+    total_flips = sum(r.metadata["est_bitflips_total"] for r in responses)
+
+    out = {
+        "arch": cfg.name,
+        "reduced": bool(args.reduced),
+        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+        "ladder": [r["bits"] for r in rungs],
+        "rungs": rungs,
+        "mixed_stream": {
+            "requests": len(mixed_reqs),
+            "tok_per_s": round(tps, 1),
+            "rungs_served": served_bits,
+            "rung_switches": mixed_switches,
+            "est_gbitflips_total": total_flips / 1e9,
+        },
+        "compilations_after_warmup": engine.compilations_after_warmup,
+    }
+    path = common.save_json("serve_traversal.json", out)
+    print(f"[serve_traversal] wrote {path}")
+    return out
+
+
+def check_baseline(result: dict, baseline_path: str = BASELINE) -> list[str]:
+    """Fail any rung whose tok/s regressed > REGRESSION_TOLERANCE."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rungs = {r["bits"]: r for r in base.get("rungs", [])}
+    failures = []
+    # symmetric drift check: a baseline rung missing from the result means
+    # the gate's coverage silently shrank — fail that too
+    missing = sorted(set(base_rungs) - {r["bits"] for r in result["rungs"]})
+    for bits in missing:
+        failures.append(
+            f"rung {bits}b: in the baseline but not measured — ladder "
+            f"drifted; refresh {baseline_path}")
+    for r in result["rungs"]:
+        b = base_rungs.get(r["bits"])
+        if b is None:
+            # a rung with no baseline is an ungated rung — fail loudly so
+            # ladder drift forces a baseline refresh instead of a no-op gate
+            failures.append(
+                f"rung {r['bits']}b: no baseline entry — refresh "
+                f"{baseline_path}")
+            continue
+        floor = (1.0 - REGRESSION_TOLERANCE) * b["tok_per_s"]
+        if r["tok_per_s"] < floor:
+            failures.append(
+                f"rung {r['bits']}b: {r['tok_per_s']:.1f} tok/s < "
+                f"{floor:.1f} (baseline {b['tok_per_s']:.1f} - 30%)")
+    return failures
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ladder", default="2,3,4,6")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt_len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed baseline snapshot")
+    args = ap.parse_args(argv)
+
+    result = run(args)
+    if args.check:
+        failures = check_baseline(result)
+        if failures:
+            for f in failures:
+                print(f"[serve_traversal] REGRESSION: {f}")
+            raise SystemExit(1)
+        print("[serve_traversal] baseline check passed")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
-"""Deployment-time power planning (Algorithm 1 + the Fig. 3 trade-off) for
-the assigned architectures — no training required.
+"""Deployment-time power planning: Algorithm 1, the Fig. 3 trade-off, and
+the serving ladder (planner.plan_ladder) — no training required.
 
     PYTHONPATH=src python examples/power_planner.py --arch dbrx-132b
 """
@@ -11,12 +11,15 @@ sys.path.insert(0, "src")
 from repro import configs  # noqa: E402
 from repro.core import costs, planner  # noqa: E402
 from repro.core import power as pw  # noqa: E402
+from repro.serve_engine import build_ladder  # noqa: E402
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
-    args = ap.parse_args()
+    ap.add_argument("--ladder", default="2,3,4,6",
+                    help="bit budgets of the serving ladder")
+    args = ap.parse_args(argv)
     cfg = configs.get_config(args.arch)
     shape = configs.SHAPES_BY_NAME["train_4k"]
     macs = costs.network_macs(cfg, shape).scale(
@@ -28,16 +31,41 @@ def main():
     print("power/token under each scheme (Giga bit-flips), and the PANN "
           "plan at each budget:")
     print(f"{'bits':>4} {'signed':>9} {'unsigned':>9} {'PANN plan':>24}")
+    rows = []
     for bits in [8, 6, 5, 4, 3, 2]:
         signed = pw.giga(pw.network_power_bitflips(macs, scheme="signed",
                                                    bits=bits))
         unsig = pw.giga(pw.network_power_bitflips(macs, scheme="unsigned",
                                                   bits=bits))
         plan = planner.plan_with_theory(planner.budget_from_bits(bits))
+        rows.append({"bits": bits, "signed_gflips": signed,
+                     "unsigned_gflips": unsig, "b_x_tilde": plan.b_x_tilde,
+                     "r": plan.r})
         print(f"{bits:>4} {signed:>9.2f} {unsig:>9.2f} "
               f"{'b~x=' + str(plan.b_x_tilde) + ' R=' + format(plan.r, '.2f'):>24}")
-    print("\n(moving between rows needs NO hardware change with PANN — "
+
+    # the serving ladder: what repro.serve_engine materializes at startup
+    ladder_bits = [int(b) for b in args.ladder.split(",")]
+    ops = build_ladder(ladder_bits, d=float(cfg.d_model))
+    print(f"\nserving ladder (build_ladder, d={cfg.d_model}) — per-token "
+          "price at each rung:")
+    ladder = []
+    for op in ops:
+        per_tok = pw.pann_token_bitflips(macs, op.r, op.b_x_tilde)
+        ladder.append({"bits": op.bits, "b_x_tilde": op.b_x_tilde,
+                       "r": op.r, "gbitflips_per_token": pw.giga(per_tok)})
+        print(f"  rung {op.bits}b: b~x={op.b_x_tilde} R={op.r:.2f} "
+              f"-> {pw.giga(per_tok):.2f} Gbit-flips/token")
+
+    # assert the output shape so this example can't rot silently
+    assert len(rows) == 6 and len(ladder) == len(set(ladder_bits))
+    assert [op.power for op in ops] == sorted(op.power for op in ops)
+    for row in ladder:
+        assert row["gbitflips_per_token"] > 0
+
+    print("\n(moving between rungs needs NO hardware change with PANN — "
           "only (b~x, R); a regular quantizer needs a different multiplier)")
+    return {"rows": rows, "ladder": ladder}
 
 
 if __name__ == "__main__":

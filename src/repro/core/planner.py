@@ -91,3 +91,26 @@ def equal_power_curve(bits: int, b_range: Iterable[int] = range(2, 9)
         if r > 0:
             out.append((b, r))
     return out
+
+
+def plan_ladder(bits_ladder: Sequence[int] = (2, 3, 4, 6),
+                d: float = 4096.0,
+                b_range: Sequence[int] = tuple(range(2, 9)),
+                eval_fn: Optional[Callable[[int, float], float]] = None,
+                ) -> tuple[PannPlan, ...]:
+    """The deployment ladder: one best (b~x, R) point per equal-power curve.
+
+    For each unsigned-MAC bit budget in ``bits_ladder``, pick the best point
+    on its Fig.-3 equal-power curve (Algorithm 1 when ``eval_fn`` is given,
+    Eq.-19 theory otherwise). Returns plans sorted by ascending power — a
+    pure function of its inputs, so ladder planning is deterministic and two
+    servers configured alike materialize identical operating points.
+    """
+    plans = []
+    for bits in sorted({int(b) for b in bits_ladder}):
+        p = budget_from_bits(bits)
+        if eval_fn is not None:
+            plans.append(plan_with_eval(p, eval_fn, b_range))
+        else:
+            plans.append(plan_with_theory(p, d, b_range))
+    return tuple(plans)

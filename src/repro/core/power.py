@@ -164,3 +164,43 @@ def network_power_bitflips(
 
 def giga(x: float) -> float:
     return x / 1e9
+
+
+# ---------------------------------------------------------------------------
+# Per-request energy accounting (serving)
+# ---------------------------------------------------------------------------
+
+def pann_token_bitflips(macs_per_token: MacBreakdown, r: float,
+                        b_x_tilde: int) -> float:
+    """Estimated bit flips of ONE generated token at a PANN operating point:
+    Eq. (13) on the weight MACs plus unsigned-MAC accounting on the act x act
+    MACs — the unit the serving engine reports per response."""
+    return network_power_bitflips(macs_per_token, scheme="pann", r=r,
+                                  b_x_tilde=b_x_tilde)
+
+
+@dataclasses.dataclass
+class EnergyLedger:
+    """Running bit-flip account for one request at a fixed operating point.
+
+    The serving engine charges one token per decode step and attaches
+    ``report()`` to the response metadata, so every reply carries its own
+    estimated energy price.
+    """
+    bitflips_per_token: float
+    tokens: int = 0
+
+    def charge(self, n_tokens: int = 1) -> None:
+        self.tokens += n_tokens
+
+    @property
+    def total(self) -> float:
+        return self.bitflips_per_token * self.tokens
+
+    def report(self) -> dict:
+        return {
+            "tokens": self.tokens,
+            "est_bitflips_per_token": self.bitflips_per_token,
+            "est_gbitflips_per_token": giga(self.bitflips_per_token),
+            "est_bitflips_total": self.total,
+        }

@@ -2,8 +2,17 @@
 optional PANN-quantized weights (the deployment story of the paper: pick a
 power budget, plan (b~x, R) with Algorithm 1, serve).
 
+Single operating point (legacy path):
+
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --batch 4 --prompt_len 32 --gen 16 --quant pann --power_bits 4
+
+Power-accuracy traversal (repro.serve_engine): plan a ladder of equal-power
+operating points once, then pick the rung PER REQUEST from a declared power
+budget — one process, one compiled step, many power levels:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --power_ladder 2,4,6 --budgets 4,2,6,6 --batch 4 --gen 16
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ from repro.configs.base import QuantConfig
 from repro.core import planner, power
 from repro.data.pipeline import SyntheticLM, frontend_stub
 from repro.models import model as MD
+from repro.serve_engine import Request, ServeEngine
 
 
 def plan_quant(args) -> QuantConfig:
@@ -36,6 +46,60 @@ def plan_quant(args) -> QuantConfig:
                        act_bits=args.power_bits)
 
 
+def serve_ladder(args) -> dict:
+    """The traversal path: one ServeEngine, per-request rung selection."""
+    ladder_bits = [int(b) for b in args.power_ladder.split(",")]
+    budgets = [int(b) for b in args.budgets.split(",")] if args.budgets \
+        else ladder_bits
+    cfg = configs.get_config(args.arch, quant=QuantConfig(mode="none"))
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    fe_fn = None
+    if cfg.family in ("encdec", "vlm"):
+        def fe_fn(batch):
+            fe = frontend_stub(cfg, batch, 0, args.seed)
+            key = "enc_inputs" if cfg.family == "encdec" else "image_embeds"
+            return {key: jnp.asarray(fe)}
+
+    max_len = args.prompt_len + args.gen
+    engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
+                         max_batch=args.batch, max_len=max_len,
+                         frontend_kwargs_fn=fe_fn)
+    engine.warmup()
+    for op in engine.ladder:
+        print(f"[serve] {op.describe()}")
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.gen,
+                    power_budget_bits=budgets[i % len(budgets)])
+            for i in range(args.requests or args.batch)]
+
+    t0 = time.monotonic()
+    responses = engine.generate(reqs)
+    dt = time.monotonic() - t0
+    engine.assert_no_recompile()
+
+    n_tok = sum(len(r.tokens) for r in responses)
+    summary = {
+        "arch": cfg.name,
+        "mode": "ladder",
+        "engine": engine.describe(),
+        "requests": [{"uid": r.uid, "rung_bits": r.rung_bits,
+                      "sample": r.tokens[:8], **r.metadata}
+                     for r in responses],
+        "generated": n_tok,
+        "wall_s": round(dt, 3),
+        "tok_per_s": round(n_tok / max(dt, 1e-9), 1),
+    }
+    print("[serve] " + json.dumps(summary))
+    return summary
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -47,8 +111,19 @@ def main(argv=None) -> dict:
                     choices=["none", "ruq", "ruq_unsigned", "pann"])
     ap.add_argument("--power_bits", type=int, default=4,
                     help="power budget expressed as an unsigned-MAC bit width")
+    ap.add_argument("--power_ladder", default="",
+                    help="comma-separated bit budgets, e.g. 2,4,6 — serve a "
+                         "multi-operating-point ladder (repro.serve_engine)")
+    ap.add_argument("--budgets", default="",
+                    help="per-request power budgets (bits), cycled over the "
+                         "request stream; defaults to the ladder itself")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests in ladder mode (default: --batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.power_ladder:
+        return serve_ladder(args)
 
     qc = plan_quant(args)
     cfg = configs.get_config(args.arch, quant=qc)

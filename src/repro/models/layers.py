@@ -63,9 +63,9 @@ def softcap(x: Array, cap: float) -> Array:
 # Asymmetric (zero-point) activation quantization
 # ---------------------------------------------------------------------------
 
-def affine_act_quant(x: Array, bits: int):
-    """x ~= s * (q - z), q unsigned in [0, 2^b - 1]. Returns (q, s, z)."""
-    n = (1 << bits) - 1
+def _affine_quant_levels(x: Array, n) -> tuple[Array, Array, Array]:
+    """The one copy of the affine quantization numerics; ``n`` (the level
+    count) may be a Python int or a traced array."""
     lo = jnp.min(x)
     hi = jnp.max(x)
     s = jnp.maximum((hi - lo) / n, 1e-12)
@@ -74,10 +74,26 @@ def affine_act_quant(x: Array, bits: int):
     return q, s, z
 
 
+def affine_act_quant(x: Array, bits: int):
+    """x ~= s * (q - z), q unsigned in [0, 2^b - 1]. Returns (q, s, z)."""
+    return _affine_quant_levels(x, (1 << bits) - 1)
+
+
 def affine_fake_quant(x: Array, bits: int) -> Array:
     q, s, z = affine_act_quant(x, bits)
     xq = s * (q - z)
     return x + jax.lax.stop_gradient(xq - x)
+
+
+def affine_fake_quant_n(x: Array, n: Array) -> Array:
+    """``affine_fake_quant`` with a *traced* level count n = 2^b - 1.
+
+    Serving variants carry n as a data leaf (models/serving.py), so ladder
+    rungs with different b~x share one jit compilation — the whole point of
+    the serve_engine's recompilation-free traversal."""
+    xf = x.astype(jnp.float32)
+    q, s, z = _affine_quant_levels(xf, n)
+    return (s * (q - z)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -132,9 +148,13 @@ def apply_linear(x: Array, p: dict, qc: QuantConfig) -> Array:
     b = None if b is None else b.astype(x.dtype)
     if "w_q" in p:
         # serving artifact (models/serving.py): PANN int codes + per-channel
-        # gamma, dequantized on load — weight-read bytes are the int8 codes
+        # gamma, dequantized on load — weight-read bytes are the int8 codes.
+        # "act_n" (= 2^b~x - 1, a data leaf so rungs share one compilation)
+        # additionally quantizes activations at the operating point's b~x.
         w = (p["w_q"].astype(jnp.float32)
              * p["w_scale"]).astype(x.dtype)
+        if "act_n" in p:
+            x = affine_fake_quant_n(x, p["act_n"])
         y = x @ w
         return y if b is None else y + b
     return qlinear(x, p["w"].astype(x.dtype), b, qc)

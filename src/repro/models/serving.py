@@ -7,18 +7,22 @@ forward. This is the §Perf iteration-5 change: decode is memory-bound and
 weight-read bytes drop 2x vs bf16 (4x vs f32); the Pallas bit-plane kernel
 (repro.kernels.pann_matmul) realizes the full b_R-bit layout on TPU.
 
-Activations stay in the compute dtype (W-PANN/A16); the PTQ accuracy story
-at matched power is measured separately in benchmarks/table2_ptq.py.
+By default activations stay in the compute dtype (W-PANN/A16); the PTQ
+accuracy story at matched power is measured separately in
+benchmarks/table2_ptq.py. Passing ``act_bits`` additionally quantizes
+activations at b~x in the forward (stored as a data leaf so serve-engine
+rungs share one compilation) — the full (b~x, R) operating point.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import pann as pann_core
+from repro.dist import sharding as shardlib
 
 # projection parents whose "w" is PANN-quantized for serving
 _QUANT_PARENTS = {
@@ -29,10 +33,18 @@ _QUANT_PARENTS = {
 
 def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 r: float | None = None,
+                                act_bits: int | None = None,
                                 store_dtype=jnp.int8) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
-    embedding gather table stay in floating point (documented)."""
+    embedding gather table stay in floating point (documented).
+
+    ``act_bits`` (b~x) additionally stores ``act_n = 2^b~x - 1`` per
+    projection so the forward quantizes activations at the operating point's
+    bit width; it is a data leaf, not a shape/dtype change, so serve-engine
+    rungs with different b~x still share one compiled decode step. Without
+    ``act_bits`` the artifact is W-PANN-only (activations in compute dtype),
+    the legacy single-point behavior."""
     r = r if r is not None else cfg.quant.r
 
     def walk(node, name=""):
@@ -46,6 +58,12 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                     "w_q": jnp.clip(w_q, -127, 127).astype(store_dtype),
                     "w_scale": gamma.astype(jnp.float32),
                 }
+                if act_bits is not None:
+                    # match the weight's stack dims (e.g. the vmapped group
+                    # axis) so scanned decode bodies can slice it per group
+                    out["act_n"] = jnp.full(w.shape[:-2],
+                                            float((1 << int(act_bits)) - 1),
+                                            jnp.float32)
                 if "b" in node:
                     out["b"] = node["b"]
                 return out
@@ -57,3 +75,48 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
         return node
 
     return walk(params)
+
+
+# ---------------------------------------------------------------------------
+# Operating-point variant cache (serve_engine)
+# ---------------------------------------------------------------------------
+
+def variant_shardings(variant: Any, mesh, par: Optional[ParallelConfig] = None
+                      ) -> Any:
+    """NamedShardings for one quantized variant on ``mesh`` — the same
+    Megatron column/row rules as training params (``w_q`` follows ``w``,
+    ``w_scale`` is replicated; see repro.dist.sharding)."""
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), variant)
+    specs = shardlib.param_specs(shapes, mesh, par or ParallelConfig())
+    return shardlib.to_named(specs, mesh)
+
+
+def build_variant_cache(params: Any, cfg: ModelConfig,
+                        r_by_rung: Mapping[Any, Any],
+                        mesh=None, par: Optional[ParallelConfig] = None,
+                        store_dtype=jnp.int8) -> dict:
+    """Materialize one int8 weight-code variant per operating point.
+
+    ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
+    rung's PANN addition budget R, or to ``(R, b~x)`` to also quantize
+    activations at the rung's bit width. All variants share one pytree
+    structure and one set of avals (b~x is stored as data, not shape), so a
+    single jitted decode step serves every rung — switching rungs is a
+    pointer swap, never a retrace. With a ``mesh``, each variant is
+    device_put with the training-param layout so the cache scales past one
+    device instead of replicating N ladders.
+    """
+    cache = {}
+    shardings = None
+    for key, spec in r_by_rung.items():
+        r, act_bits = spec if isinstance(spec, tuple) else (spec, None)
+        v = quantize_params_for_serving(params, cfg, r=float(r),
+                                        act_bits=act_bits,
+                                        store_dtype=store_dtype)
+        if mesh is not None:
+            if shardings is None:     # variants share avals: compute once
+                shardings = variant_shardings(v, mesh, par)
+            v = jax.device_put(v, shardings)
+        cache[key] = v
+    return cache

@@ -1,0 +1,25 @@
+"""``repro.serve_engine`` — power-budget-aware multi-operating-point serving.
+
+The paper's deployment claim is that PANN "seamlessly traverses the
+power-accuracy trade-off at deployment time": moving along a Fig.-3
+equal-power curve only changes ``(b~x, R)``, never the architecture. This
+package turns that claim into a serving runtime:
+
+  ladder      plan a small set of equal-power operating points (2/3/4/6-bit
+              unsigned-MAC budgets by default) from ``planner.plan_ladder``
+  scheduler   continuous-batching request scheduler that picks the rung per
+              request from a declared power budget or accuracy floor
+  engine      ``ServeEngine``: one bf16 checkpoint in, a cached int8
+              weight-code variant per rung (models/serving.py), ONE jitted
+              decode step shared by every rung, per-token bit-flip
+              accounting in every response
+
+Design notes live in DESIGN.md §6; the end-to-end traversal benchmark is
+``benchmarks/serve_traversal.py``.
+"""
+from repro.serve_engine.engine import ServeEngine
+from repro.serve_engine.ladder import OperatingPoint, build_ladder, select_rung
+from repro.serve_engine.scheduler import Request, Response, Scheduler
+
+__all__ = ["ServeEngine", "OperatingPoint", "build_ladder", "select_rung",
+           "Request", "Response", "Scheduler"]

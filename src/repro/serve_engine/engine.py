@@ -1,0 +1,295 @@
+"""ServeEngine: one checkpoint, a ladder of PANN operating points, per-request
+power-accuracy selection — with no re-quantization and no recompilation after
+warmup.
+
+Why switching is free (DESIGN.md §6): every rung's variant is produced by
+``models/serving.py`` with the same pytree structure, shapes, and dtypes
+(int8 codes + f32 scales); jax.jit keys its compilation cache on exactly
+those avals, so ONE traced decode step serves every rung and moving between
+rungs is a pointer swap into the variant cache. ``warmup()`` runs each rung
+once and records the jit cache size; ``assert_no_recompile()`` proves the
+claim after serving mixed traffic.
+
+The engine interleaves *lanes* (one per in-flight wave) round-robin, one
+decode step each — so a 2-bit lane and a 6-bit lane genuinely alternate
+operating points between decode steps of a single process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costs
+from repro.core import power as pw
+from repro.models import model as MD
+from repro.models import serving
+from repro.serve_engine.ladder import (OperatingPoint, build_ladder,
+                                       select_rung)
+from repro.serve_engine.scheduler import Request, Response, Scheduler, Wave
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One in-flight wave: its decode state and the tokens grown so far."""
+    wave: Wave
+    state: Any
+    tok: Any                 # (max_batch, 1) int32 — last sampled token
+    generated: list          # [(max_batch, 1), ...] greedy tokens
+    steps_left: int
+
+
+class ServeEngine:
+    """Multi-operating-point PANN serving runtime (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 ladder_bits: Sequence[int] = (2, 3, 4, 6),
+                 max_batch: int = 4, max_len: int = 64, mesh=None,
+                 par=None, mse_dim: Optional[float] = None,
+                 frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
+        if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
+            raise ValueError(
+                f"{cfg.family} decode needs a frontend; pass "
+                "frontend_kwargs_fn(batch) -> init_decode_state kwargs")
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.ladder = build_ladder(ladder_bits,
+                                   d=float(mse_dim or cfg.d_model))
+        self.rungs = {op.bits: op for op in self.ladder}
+        # the variant cache: int8 weight codes per rung, activations
+        # quantized at the rung's b~x (stored as data so rungs share one
+        # compilation), sharded like training params on a mesh
+        # par: the training ParallelConfig, so an FSDP-trained layout and
+        # the serving cache layout can't drift apart
+        self.variants = serving.build_variant_cache(
+            params, cfg, {op.bits: (op.r, op.b_x_tilde)
+                          for op in self.ladder}, mesh=mesh, par=par)
+        self._frontend_kwargs_fn = frontend_kwargs_fn
+        self._step = jax.jit(lambda p, s, t: MD.decode_step(p, cfg, s, t))
+        self.scheduler = Scheduler(self.ladder, self.max_batch)
+        self.compilations_after_warmup: Optional[int] = None
+        self.steps_by_rung = {op.bits: 0 for op in self.ladder}
+        self.rung_switches = 0
+        self._last_step_bits: Optional[int] = None
+        self._macs_by_ctx: dict[int, Any] = {}   # macs_per_token memo
+
+    # -- jit bookkeeping ----------------------------------------------------
+
+    def _jit_cache_size(self) -> int:
+        try:
+            return int(self._step._cache_size())
+        except Exception:
+            return -1
+
+    def warmup(self) -> None:
+        """Run one decode step per rung so every compilation (there should
+        be exactly one) happens before traffic."""
+        state = self._init_state(self.ladder[0].bits)
+        tok = jnp.zeros((self.max_batch, 1), jnp.int32)
+        for op in self.ladder:
+            jax.block_until_ready(
+                self._step(self.variants[op.bits], state, tok)[0])
+        self.compilations_after_warmup = self._jit_cache_size()
+
+    def assert_no_recompile(self) -> None:
+        """After serving: the jit cache must not have grown past warmup."""
+        if self.compilations_after_warmup is None:
+            raise RuntimeError("call warmup() first")
+        now = self._jit_cache_size()
+        if now < 0 or self.compilations_after_warmup < 0:
+            # fail loudly rather than silently skipping the central claim
+            raise RuntimeError(
+                "cannot verify the no-recompilation claim: jit cache "
+                "introspection (_cache_size) is unavailable on this jax")
+        if now > self.compilations_after_warmup:
+            raise AssertionError(
+                f"decode step recompiled while serving: "
+                f"{self.compilations_after_warmup} -> {now} cache entries")
+
+    # -- decode plumbing ----------------------------------------------------
+
+    def _init_state(self, bits: int):
+        kwargs = {}
+        if self._frontend_kwargs_fn is not None:
+            kwargs = self._frontend_kwargs_fn(self.max_batch)
+        # the serving rung's variant: for encdec/vlm, init_decode_state runs
+        # the encoder and projects cross-K/V through these weights, so the
+        # frontend side must be quantized at the same rung as decode
+        variant = self.variants[bits]
+        return MD.init_decode_state(variant, self.cfg, self.max_batch,
+                                    self.max_len, **kwargs)
+
+    def _run_step(self, bits: int, state, tok):
+        if self._last_step_bits is not None and bits != self._last_step_bits:
+            self.rung_switches += 1
+        self._last_step_bits = bits
+        self.steps_by_rung[bits] += 1
+        return self._step(self.variants[bits], state, tok)
+
+    def _greedy(self, logits):
+        v = self.cfg.vocab_size
+        return jnp.argmax(logits[:, :, :v], axis=-1).astype(jnp.int32)
+
+    def _teacher_force(self, bits: int, state, prompts):
+        """Feed a (max_batch, L) prefix token by token; return the logits of
+        the final position and the threaded state."""
+        logits = None
+        for i in range(prompts.shape[1]):
+            logits, state = self._run_step(bits, state, prompts[:, i:i + 1])
+        return logits, state
+
+    def _pad_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Pad the request dim to max_batch (repeating row 0) so every wave
+        presents identical avals to the jitted step."""
+        if rows.shape[0] == self.max_batch:
+            return rows
+        pad = np.broadcast_to(rows[:1],
+                              (self.max_batch - rows.shape[0],) + rows.shape[1:])
+        return np.concatenate([rows, pad], axis=0)
+
+    def _prefill(self, wave: Wave) -> _Lane:
+        reqs = wave.requests
+        gen_max = max(r.max_new_tokens for r in reqs)
+        if reqs[0].prompt_len + gen_max > self.max_len:
+            raise ValueError(
+                f"prompt_len {reqs[0].prompt_len} + gen {gen_max} exceeds "
+                f"engine max_len {self.max_len}")
+        prompts = jnp.asarray(
+            self._pad_rows(np.stack([r.prompt for r in reqs])), jnp.int32)
+        state = self._init_state(wave.rung.bits)
+        logits, state = self._teacher_force(wave.rung.bits, state, prompts)
+        tok = self._greedy(logits)
+        return _Lane(wave=wave, state=state, tok=tok, generated=[tok],
+                     steps_left=gen_max - 1)
+
+    def _finalize(self, lane: _Lane) -> list[Response]:
+        gen = np.asarray(jnp.concatenate(lane.generated, axis=1))
+        rung = lane.wave.rung
+        out = []
+        for i, req in enumerate(lane.wave.requests):
+            toks = gen[i, :req.max_new_tokens].tolist()
+            ctx = req.prompt_len + req.max_new_tokens
+            macs = self._macs_by_ctx.get(ctx)
+            if macs is None:
+                macs = self._macs_by_ctx.setdefault(
+                    ctx, costs.macs_per_token(self.cfg, context_len=ctx))
+            ledger = pw.EnergyLedger(
+                pw.pann_token_bitflips(macs, rung.r, rung.b_x_tilde))
+            ledger.charge(len(toks))
+            meta = {
+                "rung_bits": rung.bits,
+                "b_x_tilde": rung.b_x_tilde,
+                "r": rung.r,
+                "power_per_weight_mac": rung.power,
+                **ledger.report(),
+            }
+            out.append(Response(uid=req.uid, tokens=toks,
+                                rung_bits=rung.bits, metadata=meta))
+        return out
+
+    # -- serving loops ------------------------------------------------------
+
+    def generate(self, requests: Sequence[Request], max_lanes: int = 2
+                 ) -> list[Response]:
+        """Serve a batch of mixed-budget requests to completion.
+
+        Lanes (one per admitted wave) advance round-robin one decode step at
+        a time, so different rungs interleave between steps; finished lanes
+        free a slot and the scheduler admits the next wave (continuous
+        batching at wave granularity).
+        """
+        # validate the whole batch before any work: an oversized request or
+        # an infeasible budget/floor combination must fail the call up
+        # front, never mid-submit (stranding half the batch in the queue)
+        # or mid-generate (discarding completed lanes' responses)
+        resolved = []
+        for r in requests:
+            if r.prompt_len + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt_len {r.prompt_len} + gen "
+                    f"{r.max_new_tokens} exceeds engine max_len "
+                    f"{self.max_len}")
+            resolved.append(
+                select_rung(self.ladder, r.power_budget_bits, r.min_score))
+        for r, rung in zip(requests, resolved):
+            self.scheduler.submit(r, rung=rung)
+        lanes: list[_Lane] = []
+        responses: list[Response] = []
+        while lanes or self.scheduler.pending():
+            while len(lanes) < max_lanes:
+                wave = self.scheduler.next_wave()
+                if wave is None:
+                    break
+                lanes.append(self._prefill(wave))
+            for lane in list(lanes):
+                if lane.steps_left > 0:
+                    logits, lane.state = self._run_step(
+                        lane.wave.rung.bits, lane.state, lane.tok)
+                    lane.tok = self._greedy(logits)
+                    lane.generated.append(lane.tok)
+                    lane.steps_left -= 1
+                if lane.steps_left <= 0:
+                    responses.extend(self._finalize(lane))
+                    lanes.remove(lane)
+        return sorted(responses, key=lambda r: r.uid)
+
+    def decode_stream(self, prompt: np.ndarray,
+                      schedule: Sequence[tuple[int, int]]) -> dict:
+        """Greedy-decode one stream whose rung changes mid-flight.
+
+        ``schedule`` is ``[(bits, n_tokens), ...]``. A switch replays the
+        accumulated prefix through the target rung's cached variant
+        (teacher-forced, same jitted step — no re-quantization, no
+        recompilation), then continues decoding; the continuation is
+        therefore bit-identical to a fresh server at that rung given the
+        same prefix (tested in tests/test_serve_engine.py).
+        """
+        prefix = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        prompt_len = len(prefix)
+        total_gen = sum(n for _, n in schedule)
+        if prompt_len + total_gen > self.max_len:
+            raise ValueError("schedule exceeds engine max_len")
+        for bits, _ in schedule:       # whole schedule up front, like the
+            if bits not in self.rungs:  # length check — never mid-decode
+                raise KeyError(f"no rung for {bits}-bit budget; "
+                               f"ladder has {sorted(self.rungs)}")
+        segments = []
+        for bits, n in schedule:
+            if n <= 0:
+                segments.append({"rung_bits": bits, "tokens": []})
+                continue
+            rows = jnp.asarray(
+                self._pad_rows(np.asarray(prefix, np.int32)[None, :]),
+                jnp.int32)
+            state = self._init_state(bits)
+            logits, state = self._teacher_force(bits, state, rows)
+            seg = []
+            tok = self._greedy(logits)
+            seg.append(int(np.asarray(tok)[0, 0]))
+            for _ in range(n - 1):
+                logits, state = self._run_step(bits, state, tok)
+                tok = self._greedy(logits)
+                seg.append(int(np.asarray(tok)[0, 0]))
+            prefix.extend(seg)
+            segments.append({"rung_bits": bits, "tokens": seg})
+        return {"tokens": prefix[prompt_len:], "segments": segments}
+
+    # -- reporting ----------------------------------------------------------
+
+    def describe(self) -> dict:
+        return {
+            "ladder": [{"bits": op.bits, "b_x_tilde": op.b_x_tilde,
+                        "r": round(op.r, 3),
+                        "power_per_weight_mac": round(op.power, 2)}
+                       for op in self.ladder],
+            "max_batch": self.max_batch,
+            "max_len": self.max_len,
+            "compilations_after_warmup": self.compilations_after_warmup,
+            "steps_by_rung": dict(self.steps_by_rung),
+            "rung_switches": self.rung_switches,
+        }

@@ -1,0 +1,88 @@
+"""The operating-point ladder: the deployment-time power-accuracy dial.
+
+A rung is one equal-power PANN point — "the accuracy you can buy for the
+power of a b-bit unsigned MAC" (Fig. 3). The ladder is a handful of rungs
+planned once at server startup; every request then names a rung indirectly,
+through a power budget or an accuracy floor, and the scheduler resolves it
+with ``select_rung``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core import planner
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One rung: the bit budget it matches and the planned PANN point."""
+    bits: int                    # unsigned-MAC bit width this rung's power equals
+    plan: planner.PannPlan
+
+    @property
+    def power(self) -> float:
+        return self.plan.power_budget
+
+    @property
+    def r(self) -> float:
+        return self.plan.r
+
+    @property
+    def b_x_tilde(self) -> int:
+        return self.plan.b_x_tilde
+
+    @property
+    def score(self) -> float:
+        return self.plan.score
+
+    def describe(self) -> str:
+        return f"rung[{self.bits}b] {self.plan.describe()}"
+
+
+def build_ladder(bits: Sequence[int] = (2, 3, 4, 6), d: float = 4096.0,
+                 eval_fn=None) -> tuple[OperatingPoint, ...]:
+    """Plan the ladder, sorted by ascending power. Deterministic: a pure
+    function of (bits, d), so two servers configured alike agree rung for
+    rung (tested in tests/test_serve_engine.py)."""
+    sorted_bits = sorted({int(b) for b in bits})
+    plans = planner.plan_ladder(sorted_bits, d=d, eval_fn=eval_fn)
+    return tuple(OperatingPoint(b, p) for b, p in zip(sorted_bits, plans))
+
+
+def select_rung(ladder: Sequence[OperatingPoint],
+                power_budget_bits: Optional[int] = None,
+                min_score: Optional[float] = None) -> OperatingPoint:
+    """Resolve a request's declared constraint to a rung.
+
+    * power budget: the highest-fidelity rung whose power fits the budget
+      (best accuracy the budget can buy); below the lowest rung we clamp to
+      the lowest rung rather than refuse the request.
+    * accuracy floor: the cheapest rung whose planner score meets the floor
+      (least power that honors the SLO); unattainable floors get the top
+      rung — the best the server has.
+    * both: the cheapest rung meeting the floor WITHIN the budget; if the
+      floor needs more power than the budget allows, raise — silently
+      violating a declared SLO is worse than refusing the request.
+    * neither: the top rung.
+    """
+    if not ladder:
+        raise ValueError("empty ladder")
+    ladder = sorted(ladder, key=lambda op: op.power)
+    if power_budget_bits is not None:
+        fits = [op for op in ladder if op.bits <= power_budget_bits] \
+            or [ladder[0]]
+        if min_score is None:
+            return fits[-1]
+        for op in fits:                # ascending power == ascending score
+            if op.score >= min_score:
+                return op
+        raise ValueError(
+            f"no rung within a {power_budget_bits}-bit power budget meets "
+            f"score floor {min_score} (best affordable: {fits[-1].score})")
+    if min_score is not None:
+        for op in ladder:
+            if op.score >= min_score:
+                return op
+        return ladder[-1]
+    return ladder[-1]

@@ -1,0 +1,33 @@
+"""Examples can't rot silently: run their main() in-process and rely on the
+shape assertions each example carries (plus a few checks here)."""
+import importlib.util
+import os
+
+_EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _load(name):
+    path = os.path.join(_EXAMPLES, f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"example_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_power_planner_example_ladder_shape():
+    mod = _load("power_planner")
+    out = mod.main(["--arch", "llama3-8b", "--ladder", "2,4,6"])
+    assert len(out["rows"]) == 6
+    assert [r["bits"] for r in out["ladder"]] == [2, 4, 6]
+    # the traversal: per-token price must rise monotonically with the rung
+    prices = [r["gbitflips_per_token"] for r in out["ladder"]]
+    assert prices == sorted(prices) and prices[0] > 0
+
+
+def test_serve_lm_example_ladder_serving():
+    mod = _load("serve_lm")
+    summary = mod.main(["--arch", "llama3-8b", "--gen", "8"])
+    assert summary["mode"] == "ladder"
+    assert summary["generated"] == 6 * 8
+    served = {r["rung_bits"] for r in summary["requests"]}
+    assert served == {2, 4, 6}
