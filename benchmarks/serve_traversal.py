@@ -7,12 +7,21 @@ stream to demonstrate per-request traversal in a single process (no
 re-quantization, no recompilation — asserted, not just claimed).
 
     PYTHONPATH=src python benchmarks/serve_traversal.py --reduced --check
+    PYTHONPATH=src python benchmarks/serve_traversal.py --reduced --check \
+        --allocation layerwise
+
+``--allocation layerwise`` sweeps the per-module PolicyTree rungs
+(planner.allocate_layerwise) instead of the uniform ones, asserting each
+rung's power parity with its uniform twin and its theory-score dominance
+in the process; its results and baseline live in *_layerwise.json files so
+the two allocations gate independently.
 
 ``--check`` gates against the committed baseline snapshot
-(benchmarks/baselines/serve_traversal.json): any rung regressing tokens/sec
-by more than 30% fails the run (CI uploads the fresh JSON as an artifact).
-Refresh the baseline by copying benchmarks/results/serve_traversal.json over
-it when the hardware or the engine legitimately changes.
+(benchmarks/baselines/serve_traversal[_layerwise].json): any rung regressing
+tokens/sec by more than 30% fails the run (CI uploads the fresh JSON as an
+artifact). Refresh the baseline by copying the matching file from
+benchmarks/results/ over it when the hardware or the engine legitimately
+changes.
 """
 from __future__ import annotations
 
@@ -34,9 +43,20 @@ from repro.configs.base import QuantConfig  # noqa: E402
 from repro.models import model as MD  # noqa: E402
 from repro.serve_engine import Request, ServeEngine  # noqa: E402
 
-BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
-                        "serve_traversal.json")
 REGRESSION_TOLERANCE = 0.30
+
+
+def result_name(allocation: str) -> str:
+    suffix = "_layerwise" if allocation == "layerwise" else ""
+    return f"serve_traversal{suffix}.json"
+
+
+def baseline_path(allocation: str) -> str:
+    return os.path.join(os.path.dirname(__file__), "baselines",
+                        result_name(allocation))
+
+
+BASELINE = baseline_path("uniform")   # legacy alias (tests, callers)
 
 
 def _make_requests(rng, cfg, n, prompt_len, gen, budgets):
@@ -72,9 +92,11 @@ def run(args) -> dict:
     params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
                          max_batch=args.batch,
-                         max_len=args.prompt_len + args.gen)
+                         max_len=args.prompt_len + args.gen,
+                         allocation=args.allocation)
     engine.warmup()
     rng = np.random.default_rng(args.seed)
+    total_macs = sum(m.macs for m in engine.profile)
 
     rungs = []
     for op in engine.ladder:
@@ -82,12 +104,24 @@ def run(args) -> dict:
                               args.gen, [op.bits])
         tps, responses, _ = _timed_generate(engine, reqs)
         meta = responses[0].metadata
-        rungs.append({
+        row = {
             "bits": op.bits, "b_x_tilde": op.b_x_tilde, "r": round(op.r, 4),
             "power_per_weight_mac": op.power,
             "tok_per_s": round(tps, 1),
             "est_gbitflips_per_token": meta["est_gbitflips_per_token"],
-        })
+        }
+        if op.lw is not None:
+            # the layerwise claims, asserted per sweep: same total power as
+            # the uniform twin (1%), theory score never below it
+            parity = op.lw.total_power / (op.power * total_macs)
+            assert abs(parity - 1.0) <= 0.01, (op.bits, parity)
+            assert op.lw.score >= op.lw.uniform_score, op.bits
+            row.update({
+                "power_vs_uniform": round(parity, 6),
+                "score": round(op.lw.score, 6),
+                "uniform_score": round(op.lw.uniform_score, 6),
+            })
+        rungs.append(row)
         common.emit(f"serve_traversal/rung{op.bits}b", 1e6 / max(tps, 1e-9),
                     f"tok/s={tps:.1f}")
 
@@ -101,6 +135,7 @@ def run(args) -> dict:
     out = {
         "arch": cfg.name,
         "reduced": bool(args.reduced),
+        "allocation": args.allocation,
         "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
         "ladder": [r["bits"] for r in rungs],
         "rungs": rungs,
@@ -113,7 +148,7 @@ def run(args) -> dict:
         },
         "compilations_after_warmup": engine.compilations_after_warmup,
     }
-    path = common.save_json("serve_traversal.json", out)
+    path = common.save_json(result_name(args.allocation), out)
     print(f"[serve_traversal] wrote {path}")
     return out
 
@@ -158,13 +193,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--allocation", default="uniform",
+                    choices=["uniform", "layerwise"],
+                    help="rung allocation to sweep; layerwise gates "
+                         "against its own *_layerwise.json baseline")
     ap.add_argument("--check", action="store_true",
                     help="gate against the committed baseline snapshot")
     args = ap.parse_args(argv)
 
     result = run(args)
     if args.check:
-        failures = check_baseline(result)
+        failures = check_baseline(result, baseline_path(args.allocation))
         if failures:
             for f in failures:
                 print(f"[serve_traversal] REGRESSION: {f}")

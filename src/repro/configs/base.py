@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.policy import PolicyTree
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
@@ -75,6 +77,11 @@ class ModelConfig:
     # shallow variants; never for real execution.
     unroll_loops: bool = False
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    # Per-module policy tree (repro.core.policy). None = the global ``quant``
+    # applies uniformly (the pre-policy behavior, bit-exact). When set, every
+    # projection looks up its own ModuleQuant by module path ("attn.wq",
+    # "mlp.w_down", ...) via ``layers.module_quant``.
+    policy: Optional[PolicyTree] = None
 
     @property
     def resolved_head_dim(self) -> int:

@@ -1,4 +1,5 @@
 """Core PANN library: power models, bit-flip simulators, quantizers, the
 unsigned-arithmetic conversion, PANN weight quantization, the Algorithm-1
 planner, and the quantization-error theory."""
-from repro.core import bitflip, mse, pann, planner, power, quant, unsigned  # noqa: F401
+from repro.core import (bitflip, mse, pann, planner, policy, power,  # noqa: F401
+                        quant, unsigned)

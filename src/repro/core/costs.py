@@ -6,7 +6,10 @@ against compiled HLO FLOPs.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import power as pw
 from repro.core.power import MacBreakdown
 from repro.models.transformer import group_layout
 
@@ -120,6 +123,114 @@ def macs_per_token(cfg: ModelConfig, context_len: int = 4096) -> MacBreakdown:
         if kind == "mamba_attn":
             act += 2.0 * cfg.num_heads * hd * context_len
     return MacBreakdown(weight_macs=weight, act_macs=act)
+
+
+# ---------------------------------------------------------------------------
+# Per-module MAC profile (the layerwise allocator's input)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModuleCost:
+    """One module role's aggregate forward cost per token.
+
+    ``fan_in`` is one instance's reduction width — the d of Eq. (19)'s MSE
+    and the k^2 C_in of Eq. (20)'s accumulator bound. ``macs`` sums over all
+    ``instances`` of the role across the depth of the network (module paths
+    are roles, not per-depth instances; see core/policy.py).
+    """
+    path: str
+    macs: float          # weight MACs per token, all instances
+    fan_in: int          # reduction width of one instance
+    instances: int = 1
+
+    def acc_bits(self, b_x: int, b_w: int) -> int:
+        """Eq. (20) accumulator width for this module's fan-in, capped at
+        the paper's 32-bit default (never wider than the hardware)."""
+        return min(pw.DEFAULT_ACC_BITS,
+                   pw.required_acc_bits(b_x, b_w, self.fan_in))
+
+
+def module_cost_profile(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
+    """Weight-MAC profile by module path, consistent with ``macs_per_token``:
+    the profile's total equals its ``weight_macs`` up to the tiny terms the
+    analytic param count also ignores (qkv biases, norm vectors).
+
+    MoE experts are counted at the *active* (top-k) rate, matching
+    ``param_count(active_only=True)``. The embedding gather contributes no
+    MACs and has no entry.
+    """
+    acc: dict[str, list] = {}     # path -> [macs, fan_in, instances]
+
+    def add(path: str, d_in: int, d_out: int, count: float = 1.0) -> None:
+        row = acc.setdefault(path, [0.0, int(d_in), 0])
+        row[0] += float(d_in) * float(d_out) * count
+        row[2] += max(int(round(count)), 1) if count else 0
+
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+
+    def add_attn(count: float = 1.0) -> None:
+        add("attn.wq", d, cfg.num_heads * hd, count)
+        add("attn.wk", d, cfg.num_kv_heads * hd, count)
+        add("attn.wv", d, cfg.num_kv_heads * hd, count)
+        add("attn.wo", cfg.num_heads * hd, d, count)
+
+    def add_mlp(count: float = 1.0) -> None:
+        if cfg.activation in ("swiglu", "geglu"):
+            add("mlp.w_gate", d, cfg.d_ff, count)
+        add("mlp.w_up", d, cfg.d_ff, count)
+        add("mlp.w_down", cfg.d_ff, d, count)
+
+    def add_ssm(count: float = 1.0) -> None:
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        add("ssm.in_proj", d, 2 * d_inner + 2 * n + h, count)
+        add("ssm.out_proj", d_inner, d, count)
+        # depthwise causal conv: conv_width MACs per channel per token
+        add("ssm.conv", cfg.ssm_conv_width, d_inner + 2 * n, count)
+
+    def add_rwkv(count: float = 1.0) -> None:
+        for name in ("wr", "wk", "wv", "wg", "wo"):
+            add(f"rwkv.tm.{name}", d, d, count)
+        add("rwkv.tm.decay_a", d, 64, count)
+        add("rwkv.tm.decay_b", 64, d, count)
+        add("rwkv.cm.wk", d, cfg.d_ff, count)
+        add("rwkv.cm.wv", cfg.d_ff, d, count)
+
+    pattern, n_groups, n_tail = group_layout(cfg)
+    seq = [s.kind for s in pattern] * n_groups \
+        + [pattern[i].kind for i in range(n_tail)]
+    for kind in seq:
+        if kind == "attn":
+            add_attn()
+            add_mlp()
+        elif kind == "attn_moe":
+            add_attn()
+            add("moe.router", d, cfg.moe.num_experts)
+            k = cfg.moe.top_k
+            if cfg.activation in ("swiglu", "geglu"):
+                add("moe.w_gate", d, cfg.d_ff, k)
+            add("moe.w_up", d, cfg.d_ff, k)
+            add("moe.w_down", cfg.d_ff, d, k)
+        elif kind == "cross_attn":
+            add_attn(2.0)          # self + cross projections
+            add_mlp()
+        elif kind in ("mamba", "mamba_attn"):
+            add_ssm()              # hybrid shared block counted once below
+        elif kind == "rwkv":
+            add_rwkv()
+    if cfg.family == "hybrid":
+        add_attn()
+        add_mlp()
+    if cfg.family == "encdec":
+        add_attn(float(cfg.encoder_layers))
+        add_mlp(float(cfg.encoder_layers))
+    if not cfg.tie_embeddings:
+        add("lm_head", d, cfg.padded_vocab)
+    return tuple(ModuleCost(path=p, macs=row[0], fan_in=row[1],
+                            instances=row[2])
+                 for p, row in sorted(acc.items()))
 
 
 def network_macs(cfg: ModelConfig, shape: ShapeConfig) -> MacBreakdown:

@@ -18,6 +18,7 @@ import math
 from typing import Callable, Iterable, Optional, Sequence
 
 from repro.core import mse as mse_theory
+from repro.core import policy as pol
 from repro.core import power as pw
 
 
@@ -29,10 +30,17 @@ class PannPlan:
     score: float             # accuracy (eval backend) or -MSE (theory backend)
     candidates: tuple        # (b_x, r, score) for every candidate swept
 
-    def describe(self) -> str:
-        return (f"PANN plan @ P={self.power_budget:.1f} bit-flips/MAC: "
+    def describe(self, total_macs: Optional[float] = None) -> str:
+        """``total_macs`` (network weight MACs per token) appends the total
+        network price — MACs x per-MAC power — so uniform and layerwise
+        plans compare in the same unit in logs."""
+        text = (f"PANN plan @ P={self.power_budget:.1f} bit-flips/MAC: "
                 f"b~x={self.b_x_tilde}, R={self.r:.2f} "
                 f"(score {self.score:.4f})")
+        if total_macs is not None:
+            total = pw.giga(self.power_budget * total_macs)
+            text += f" | total {total:.2f} Gbit-flips/token"
+        return text
 
 
 def candidate_bit_widths(power: float,
@@ -97,20 +105,233 @@ def plan_ladder(bits_ladder: Sequence[int] = (2, 3, 4, 6),
                 d: float = 4096.0,
                 b_range: Sequence[int] = tuple(range(2, 9)),
                 eval_fn: Optional[Callable[[int, float], float]] = None,
-                ) -> tuple[PannPlan, ...]:
-    """The deployment ladder: one best (b~x, R) point per equal-power curve.
+                allocation: str = "uniform",
+                profile: Optional[Sequence] = None,
+                ) -> tuple:
+    """The deployment ladder: one operating point per equal-power budget.
 
     For each unsigned-MAC bit budget in ``bits_ladder``, pick the best point
     on its Fig.-3 equal-power curve (Algorithm 1 when ``eval_fn`` is given,
     Eq.-19 theory otherwise). Returns plans sorted by ascending power — a
     pure function of its inputs, so ladder planning is deterministic and two
     servers configured alike materialize identical operating points.
+
+    ``allocation="layerwise"`` (requires ``profile``, a
+    ``costs.module_cost_profile``) returns ``LayerwisePlan``s instead: each
+    rung spends the SAME total bit-flip budget non-uniformly across module
+    paths via ``allocate_layerwise`` — every rung's power matches its
+    uniform twin, its theory score never trails it.
     """
+    if allocation not in ("uniform", "layerwise"):
+        raise ValueError(f"unknown allocation {allocation!r}")
+    if allocation == "layerwise" and profile is None:
+        raise ValueError("layerwise allocation needs a module cost profile")
+    if allocation == "layerwise" and eval_fn is not None:
+        # never silently drop the eval backend: a per-(b,r) eval_fn cannot
+        # score a tree; eval-backed layerwise planning takes a tree-level
+        # judge via allocate_layerwise(eval_fn=tree -> score) directly
+        raise ValueError(
+            "plan_ladder(eval_fn=...) is the Algorithm-1 per-(b~x, R) "
+            "backend and does not apply to layerwise allocation; call "
+            "allocate_layerwise(..., eval_fn=tree -> score) instead")
     plans = []
     for bits in sorted({int(b) for b in bits_ladder}):
         p = budget_from_bits(bits)
-        if eval_fn is not None:
+        if allocation == "layerwise":
+            plans.append(allocate_layerwise(p, profile, b_range=b_range))
+        elif eval_fn is not None:
             plans.append(plan_with_eval(p, eval_fn, b_range))
         else:
             plans.append(plan_with_theory(p, d, b_range))
     return tuple(plans)
+
+
+# ---------------------------------------------------------------------------
+# Layer-wise power-budget allocation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerwisePlan:
+    """A per-module spend of the network's total bit-flip budget.
+
+    ``power_budget`` is the matched per-weight-MAC budget (same unit as
+    ``PannPlan``): the plan's total power equals ``power_budget x
+    total_macs`` — the SAME total as the uniform plan at this budget —
+    spent non-uniformly across module paths.
+    """
+    power_budget: float          # per weight-MAC (matched to uniform)
+    tree: pol.PolicyTree         # pann ModuleQuant per module path
+    score: float                 # tree_theory_score (or eval_fn) of the tree
+    uniform_score: float         # same metric, matched uniform tree
+    uniform_tree: pol.PolicyTree
+    total_macs: float            # weight MACs per token
+    total_power: float           # bit flips per token (weight modules)
+    per_module: tuple            # (path, macs, fan_in, b~x, R, p/MAC) rows
+
+    def describe(self) -> str:
+        total = pw.giga(self.total_power)
+        gain = self.score - self.uniform_score
+        return (f"layerwise plan @ P={self.power_budget:.1f} bit-flips/MAC "
+                f"x {self.total_macs:.3e} MACs = {total:.2f} "
+                f"Gbit-flips/token over {len(self.per_module)} modules "
+                f"(score {self.score:.4f}, +{gain:.4f} vs uniform)")
+
+    def bit_table(self) -> str:
+        rows = [f"{'module':<16}{'MACs':>12}{'fan_in':>8}{'b~x':>5}"
+                f"{'R':>8}{'bf/MAC':>8}{'Gbf/tok':>9}"]
+        for path, macs, fan_in, b, r, p_mac in self.per_module:
+            rows.append(f"{path:<16}{macs:>12.3e}{fan_in:>8d}{b:>5d}"
+                        f"{r:>8.2f}{p_mac:>8.2f}"
+                        f"{pw.giga(macs * p_mac):>9.3f}")
+        return "\n".join(rows)
+
+
+def _level_grid(power_budget: float, n_levels: int) -> list[float]:
+    """Per-MAC power levels the knapsack moves between: geometric from just
+    above the cheapest viable PANN point up to well past the budget (a
+    module CAN exceed the per-MAC budget — that is the point of layerwise —
+    as long as the network total stays inside)."""
+    lo = pw.p_pann(0.25, 2)                      # 1.5 bit flips/MAC
+    hi = max(4.0 * power_budget, pw.p_mac_unsigned(8))
+    ratio = (hi / lo) ** (1.0 / (n_levels - 1))
+    grid = [lo * ratio ** i for i in range(n_levels)]
+    grid.append(float(power_budget))             # uniform point reachable
+    return sorted(set(grid))
+
+
+def _best_point_at(p: float, b_range: Sequence[int]
+                   ) -> Optional[tuple[int, float, float]]:
+    """Best (b~x, R, relative mse) on the equal-power curve at per-MAC
+    power ``p`` — plan_with_theory's argmin, with the d=1 (signal-
+    normalized) Eq.-18 MSE the tree score uses (see
+    policy.tree_theory_score; the argmin over b is d-independent)."""
+    best = None
+    for b in b_range:
+        r = pw.pann_r_for_budget(p, b)
+        if r <= 0.05:
+            continue
+        m = mse_theory.mse_pann(1.0, b, r)
+        if best is None or m < best[2]:
+            best = (b, r, m)
+    return best
+
+
+def allocate_layerwise(power_budget: float,
+                       profile: Sequence,
+                       b_range: Sequence[int] = tuple(range(2, 9)),
+                       n_levels: int = 48,
+                       eval_fn: Optional[Callable] = None,
+                       ) -> LayerwisePlan:
+    """Spend ``power_budget x total_macs`` bit flips across modules.
+
+    Greedy marginal-benefit knapsack over a shared grid of per-MAC power
+    levels: every module starts at the cheapest viable PANN point; the
+    upgrade with the best MSE-reduction per extra bit flip is applied until
+    no upgrade fits the total budget. Two closing moves make the invariants
+    (tests/test_policy_allocator.py) unconditional:
+
+      * R-fill — the residual slack is spread over all modules as extra R
+        at fixed b~x (Eq. 13 is linear in R), so total power equals the
+        budget exactly, matching the uniform plan's total to float
+        precision.
+      * uniform fallback — if the greedy tree somehow scores below the
+        matched uniform tree under ``tree_theory_score``, the uniform tree
+        is returned instead: layerwise is never worse than uniform.
+
+    ``eval_fn(tree) -> score`` mirrors ``plan_with_eval``: when given, the
+    greedy and uniform candidate trees are both evaluated and the better
+    one wins (the recorded score is then the eval score).
+
+    ``profile`` is ``costs.module_cost_profile(cfg)`` (anything with
+    .path/.macs/.fan_in works).
+    """
+    modules = [m for m in profile if m.macs > 0]
+    if not modules:
+        raise ValueError("empty module cost profile")
+    total_macs = sum(m.macs for m in modules)
+    budget_total = power_budget * total_macs
+
+    # the matched uniform twin: the global Algorithm-1 point everywhere
+    uni = plan_with_theory(power_budget, b_range=b_range)
+    uniform_tree = pol.policy_tree(
+        pol.pann_module_quant(uni.r, uni.b_x_tilde,
+                              max(m.fan_in for m in modules)),
+        {m.path: pol.pann_module_quant(uni.r, uni.b_x_tilde, m.fan_in)
+         for m in modules})
+
+    # per-module candidate levels: (per-MAC power, b~x, R, mse), ascending
+    grid = _level_grid(power_budget, n_levels)
+    cands = []
+    for m in modules:
+        levels = []
+        for p in grid:
+            pt = _best_point_at(p, b_range)
+            if pt is not None:
+                levels.append((p, pt[0], pt[1], pt[2]))
+        if not levels:
+            raise ValueError(
+                f"power budget {power_budget} too small for any bit width "
+                f"(module {m.path})")
+        cands.append(levels)
+
+    idx = [0] * len(modules)
+    total = sum(m.macs * cands[i][0][0] for i, m in enumerate(modules))
+    if total > budget_total * (1 + 1e-9):
+        raise ValueError(
+            f"power budget {power_budget} below the cheapest viable "
+            f"layerwise plan ({total / total_macs:.2f} bit-flips/MAC)")
+    # weight of one neuron's MSE: outputs per token = macs / fan_in
+    w = [m.macs / max(float(m.fan_in), 1.0) for m in modules]
+    while True:
+        best, best_gain = None, 0.0
+        for i, m in enumerate(modules):
+            if idx[i] + 1 >= len(cands[i]):
+                continue
+            cur, nxt = cands[i][idx[i]], cands[i][idx[i] + 1]
+            dcost = m.macs * (nxt[0] - cur[0])
+            if total + dcost > budget_total * (1 + 1e-12):
+                continue
+            gain = w[i] * (cur[3] - nxt[3]) / max(dcost, 1e-30)
+            if best is None or gain > best_gain:
+                best, best_gain = i, gain
+        if best is None:
+            break
+        total += modules[best].macs * (cands[best][idx[best] + 1][0]
+                                       - cands[best][idx[best]][0])
+        idx[best] += 1
+
+    # R-fill: hand the residual slack to every module as extra R at fixed
+    # b~x — consumes the budget exactly and only lowers the Eq.-18 MSE
+    slack_per_mac = (budget_total - total) / total_macs
+    chosen = {}
+    for i, m in enumerate(modules):
+        p, b, r, _ = cands[i][idx[i]]
+        p_eff = p + slack_per_mac
+        chosen[m.path] = (p_eff, b, pw.pann_r_for_budget(p_eff, b))
+
+    tree = pol.policy_tree(
+        pol.pann_module_quant(uni.r, uni.b_x_tilde,
+                              max(m.fan_in for m in modules)),
+        {m.path: pol.pann_module_quant(r, b, m.fan_in)
+         for m, (p_eff, b, r) in
+         ((m, chosen[m.path]) for m in modules)})
+
+    score = pol.tree_theory_score(modules, tree)
+    uniform_score = pol.tree_theory_score(modules, uniform_tree)
+    if eval_fn is not None:
+        score = float(eval_fn(tree))
+        uniform_score = float(eval_fn(uniform_tree))
+    if score < uniform_score:        # the unconditional guarantee
+        tree, score = uniform_tree, uniform_score
+
+    per_module = tuple(
+        (m.path, m.macs, m.fan_in, tree.lookup(m.path).b_x_tilde,
+         tree.lookup(m.path).r, tree.lookup(m.path).power_per_mac())
+        for m in modules)
+    total_power = sum(m.macs * tree.lookup(m.path).power_per_mac()
+                      for m in modules)
+    return LayerwisePlan(power_budget=power_budget, tree=tree, score=score,
+                         uniform_score=uniform_score,
+                         uniform_tree=uniform_tree,
+                         total_macs=total_macs, total_power=total_power,
+                         per_module=per_module)

@@ -185,10 +185,14 @@ class EnergyLedger:
 
     The serving engine charges one token per decode step and attaches
     ``report()`` to the response metadata, so every reply carries its own
-    estimated energy price.
+    estimated energy price. ``breakdown_per_token`` (module path -> bit
+    flips per token, e.g. from ``policy.tree_power_per_token``) additionally
+    itemizes WHERE the budget went — the per-module view that makes a
+    layerwise allocation auditable from the response alone.
     """
     bitflips_per_token: float
     tokens: int = 0
+    breakdown_per_token: Optional[dict] = None
 
     def charge(self, n_tokens: int = 1) -> None:
         self.tokens += n_tokens
@@ -198,9 +202,18 @@ class EnergyLedger:
         return self.bitflips_per_token * self.tokens
 
     def report(self) -> dict:
-        return {
+        out = {
             "tokens": self.tokens,
             "est_bitflips_per_token": self.bitflips_per_token,
             "est_gbitflips_per_token": giga(self.bitflips_per_token),
             "est_bitflips_total": self.total,
         }
+        if self.breakdown_per_token:
+            denom = sum(self.breakdown_per_token.values()) or 1.0
+            out["per_module_gbitflips_per_token"] = {
+                path: giga(v) for path, v in
+                sorted(self.breakdown_per_token.items())}
+            out["per_module_share"] = {
+                path: round(v / denom, 4) for path, v in
+                sorted(self.breakdown_per_token.items())}
+        return out

@@ -27,19 +27,21 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import QuantConfig
-from repro.core import planner, power
+from repro.core import costs, planner, power
 from repro.data.pipeline import SyntheticLM, frontend_stub
 from repro.models import model as MD
 from repro.serve_engine import Request, ServeEngine
 
 
-def plan_quant(args) -> QuantConfig:
+def plan_quant(args, total_macs: float | None = None) -> QuantConfig:
     if args.quant == "none":
         return QuantConfig(mode="none")
     if args.quant == "pann":
         budget = planner.budget_from_bits(args.power_bits)
         plan = planner.plan_with_theory(budget)
-        print(f"[serve] {plan.describe()}")
+        # total network price (MACs x per-MAC power), not just per-MAC:
+        # directly comparable with ladder / layerwise startup logs
+        print(f"[serve] {plan.describe(total_macs=total_macs)}")
         return QuantConfig(mode="pann", r=plan.r,
                            act_bits_tilde=plan.b_x_tilde)
     return QuantConfig(mode=args.quant, weight_bits=args.power_bits,
@@ -66,10 +68,17 @@ def serve_ladder(args) -> dict:
     max_len = args.prompt_len + args.gen
     engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
                          max_batch=args.batch, max_len=max_len,
+                         allocation=args.allocation,
                          frontend_kwargs_fn=fe_fn)
     engine.warmup()
+    total_macs = sum(m.macs for m in engine.profile)
     for op in engine.ladder:
-        print(f"[serve] {op.describe()}")
+        if op.lw is not None:
+            print(f"[serve] {op.describe()}")
+        else:
+            # same unit as the layerwise log: total network Gbit-flips
+            print(f"[serve] rung[{op.bits}b] "
+                  f"{op.plan.describe(total_macs=total_macs)}")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -114,6 +123,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--power_ladder", default="",
                     help="comma-separated bit budgets, e.g. 2,4,6 — serve a "
                          "multi-operating-point ladder (repro.serve_engine)")
+    ap.add_argument("--allocation", default="uniform",
+                    choices=["uniform", "layerwise"],
+                    help="ladder rung allocation: one global (b~x, R) per "
+                         "rung, or a per-module PolicyTree spending the "
+                         "same total power layer-wise "
+                         "(planner.allocate_layerwise)")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")
@@ -124,11 +139,19 @@ def main(argv=None) -> dict:
 
     if args.power_ladder:
         return serve_ladder(args)
+    if args.allocation != "uniform":
+        # only the ladder path consumes --allocation; refuse rather than
+        # silently serve a uniform single point the user didn't ask for
+        raise SystemExit(
+            "--allocation layerwise requires --power_ladder (the "
+            "single-point path has no per-module rungs)")
 
-    qc = plan_quant(args)
-    cfg = configs.get_config(args.arch, quant=qc)
+    cfg = configs.get_config(args.arch)
     if args.reduced:
-        cfg = dataclasses.replace(configs.reduced(cfg), quant=qc)
+        cfg = configs.reduced(cfg)
+    qc = plan_quant(args,
+                    total_macs=costs.macs_per_token(cfg).weight_macs)
+    cfg = dataclasses.replace(cfg, quant=qc)
 
     params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)

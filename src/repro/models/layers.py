@@ -16,7 +16,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import QuantConfig
 from repro.core import pann as pann_core
 from repro.core import quant
 
@@ -100,8 +99,25 @@ def affine_fake_quant_n(x: Array, n: Array) -> Array:
 # QuantLinear
 # ---------------------------------------------------------------------------
 
-def qlinear(x: Array, w: Array, b: Optional[Array], qc: QuantConfig) -> Array:
+def module_quant(cfg, path: str):
+    """Resolve the quant spec of the module at ``path`` ("attn.wq",
+    "mlp.w_down", ...; vocabulary in core/policy.py).
+
+    Without a policy tree this returns the global ``cfg.quant`` — the exact
+    pre-policy object down the exact pre-policy code path, so uniform
+    configs are bit-identical to the pre-refactor behavior. With one, each
+    projection gets its own ``ModuleQuant`` (whose QuantConfig-compatible
+    aliases feed the same ``qlinear`` branches).
+    """
+    if cfg.policy is None:
+        return cfg.quant
+    return cfg.policy.lookup(path)
+
+
+def qlinear(x: Array, w: Array, b: Optional[Array], qc) -> Array:
     """y = quant(x) @ quant(w) + b under the configured scheme.
+    ``qc`` is a ``QuantConfig`` or a per-module ``core.policy.ModuleQuant``
+    (attribute-compatible).
 
     Shapes: x (..., d_in), w (d_in, d_out). All schemes are implemented as
     (differentiable) fake-quant so the same code path serves PTQ evaluation
@@ -143,7 +159,7 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
     return p
 
 
-def apply_linear(x: Array, p: dict, qc: QuantConfig) -> Array:
+def apply_linear(x: Array, p: dict, qc) -> Array:
     b = p.get("b")
     b = None if b is None else b.astype(x.dtype)
     if "w_q" in p:
@@ -172,6 +188,6 @@ def embed(tokens: Array, p: dict, dtype) -> Array:
     return p["table"].astype(dtype)[tokens]
 
 
-def unembed(x: Array, p: dict, qc: QuantConfig) -> Array:
+def unembed(x: Array, p: dict, qc) -> Array:
     """LM head (weight-activation matmul -> quantized like any projection)."""
     return qlinear(x, jnp.transpose(p["table"]).astype(x.dtype), None, qc)

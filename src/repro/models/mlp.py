@@ -35,14 +35,15 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
 
 
 def apply_mlp(x: Array, p: dict, cfg: ModelConfig) -> Array:
-    qc = cfg.quant
     if cfg.activation in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
-        h = act(L.apply_linear(x, p["w_gate"], qc)) \
-            * L.apply_linear(x, p["w_up"], qc)
+        h = act(L.apply_linear(x, p["w_gate"],
+                               L.module_quant(cfg, "mlp.w_gate"))) \
+            * L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"))
     else:
-        h = _act(cfg.activation)(L.apply_linear(x, p["w_up"], qc))
-    return L.apply_linear(h, p["w_down"], qc)
+        h = _act(cfg.activation)(
+            L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up")))
+    return L.apply_linear(h, p["w_down"], L.module_quant(cfg, "mlp.w_down"))
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +91,9 @@ def route(x: Array, p: dict, cfg: ModelConfig
     """
     assert cfg.moe is not None
     e = cfg.moe.num_experts
-    logits = L.apply_linear(x, p["router"], cfg.quant).astype(jnp.float32)
+    logits = L.apply_linear(x, p["router"],
+                            L.module_quant(cfg, "moe.router")
+                            ).astype(jnp.float32)
     gates, mask = router_topk(logits, cfg.moe.top_k)
     probs_full = jax.nn.softmax(logits, axis=-1)
     f = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))        # fraction routed
@@ -104,16 +107,18 @@ def expert_ffn(x: Array, w_gate: Array, w_up: Array, w_down: Array,
     """One expert's gated FFN. The single definition shared by the dense
     scan below and the capacity-dispatch path (repro.dist.moe_ep), which
     must stay numerically identical to it."""
-    qc = cfg.quant
     act = jax.nn.silu if cfg.activation in ("swiglu", "geglu") else \
         _act(cfg.activation)
-    h = act(L.qlinear(x, w_gate.astype(x.dtype), None, qc)) \
-        * L.qlinear(x, w_up.astype(x.dtype), None, qc)
+    h = act(L.qlinear(x, w_gate.astype(x.dtype), None,
+                      L.module_quant(cfg, "moe.w_gate"))) \
+        * L.qlinear(x, w_up.astype(x.dtype), None,
+                    L.module_quant(cfg, "moe.w_up"))
     # pin TP sharding: propagation dies through the scan-sliced / vmapped
     # expert weights and GSPMD otherwise computes the FULL d_ff per device
     # (measured 16x FLOP bloat; EXPERIMENTS.md §Perf iteration 3a)
     h = C.constrain_axis(h, -1, "model")
-    return L.qlinear(h, w_down.astype(x.dtype), None, qc)
+    return L.qlinear(h, w_down.astype(x.dtype), None,
+                     L.module_quant(cfg, "moe.w_down"))
 
 
 def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:

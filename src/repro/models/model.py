@@ -133,9 +133,11 @@ def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
                         cross_src=cross_src, remat=remat)
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     if cfg.tie_embeddings:
-        logits = L.unembed(x, params["embed"], cfg.quant)
+        logits = L.unembed(x, params["embed"],
+                           L.module_quant(cfg, "lm_head"))
     else:
-        logits = L.apply_linear(x, params["lm_head"], cfg.quant)
+        logits = L.apply_linear(x, params["lm_head"],
+                                L.module_quant(cfg, "lm_head"))
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     return ForwardOut(logits=logits, aux_loss=aux)
 
@@ -249,9 +251,11 @@ def decode_step(params: dict, cfg: ModelConfig, state: DecodeState,
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     if cfg.tie_embeddings:
-        logits = L.unembed(x, params["embed"], cfg.quant)
+        logits = L.unembed(x, params["embed"],
+                           L.module_quant(cfg, "lm_head"))
     else:
-        logits = L.apply_linear(x, params["lm_head"], cfg.quant)
+        logits = L.apply_linear(x, params["lm_head"],
+                                L.module_quant(cfg, "lm_head"))
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     return logits, DecodeState(caches=new_caches, cross_kv=state.cross_kv,
                                position=state.position + 1)

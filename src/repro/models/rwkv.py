@@ -96,21 +96,27 @@ def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
     """x: (B, T, d) -> (y, final wkv state, last token). Prefill/training."""
     b, t, d = x.shape
     h = _heads(cfg)
-    qc = cfg.quant
+
+    def qc(name):
+        return L.module_quant(cfg, f"rwkv.tm.{name}")
+
     prev = jnp.zeros((b, d), x.dtype) if state is None else \
         state.shift_tm.astype(x.dtype)
     xs = _token_shift(x, prev)
     mu = p["mu"].astype(x.dtype)
     mix = [x * mu[i] + xs * (1 - mu[i]) for i in range(5)]
     r = C.constrain_axis(
-        L.apply_linear(mix[0], p["wr"], qc).reshape(b, t, h, HEAD_DIM), 2)
+        L.apply_linear(mix[0], p["wr"], qc("wr")).reshape(b, t, h,
+                                                          HEAD_DIM), 2)
     k = C.constrain_axis(
-        L.apply_linear(mix[1], p["wk"], qc).reshape(b, t, h, HEAD_DIM), 2)
+        L.apply_linear(mix[1], p["wk"], qc("wk")).reshape(b, t, h,
+                                                          HEAD_DIM), 2)
     v = C.constrain_axis(
-        L.apply_linear(mix[2], p["wv"], qc).reshape(b, t, h, HEAD_DIM), 2)
-    g = jax.nn.silu(L.apply_linear(mix[3], p["wg"], qc))
-    dlow = jnp.tanh(L.apply_linear(mix[4], p["decay_a"], qc))
-    dd = L.apply_linear(dlow, p["decay_b"], qc) + p["decay_base"]
+        L.apply_linear(mix[2], p["wv"], qc("wv")).reshape(b, t, h,
+                                                          HEAD_DIM), 2)
+    g = jax.nn.silu(L.apply_linear(mix[3], p["wg"], qc("wg")))
+    dlow = jnp.tanh(L.apply_linear(mix[4], p["decay_a"], qc("decay_a")))
+    dd = L.apply_linear(dlow, p["decay_b"], qc("decay_b")) + p["decay_base"]
     w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(b, t, h, HEAD_DIM)
 
     s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32) if state is None \
@@ -120,19 +126,20 @@ def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
                                  p["bonus"], s0)
     out = out.reshape(b, t, d).astype(x.dtype)
     out = L.apply_norm(out, p["ln_x"], "layernorm") * g
-    return L.apply_linear(out, p["wo"], qc), s_fin, x[:, -1, :]
+    return L.apply_linear(out, p["wo"], qc("wo")), s_fin, x[:, -1, :]
 
 
 def apply_channel_mix(x: Array, p: dict, cfg: ModelConfig,
                       prev: Array | None = None) -> tuple[Array, Array]:
     b, t, d = x.shape
-    qc = cfg.quant
     pv = jnp.zeros((b, d), x.dtype) if prev is None else prev.astype(x.dtype)
     xs = _token_shift(x, pv)
     mu = p["mu"].astype(x.dtype)
     xk = x * mu[0] + xs * (1 - mu[0])
-    k = jnp.square(jax.nn.relu(L.apply_linear(xk, p["wk"], qc)))
-    return L.apply_linear(k, p["wv"], qc), x[:, -1, :]
+    k = jnp.square(jax.nn.relu(
+        L.apply_linear(xk, p["wk"], L.module_quant(cfg, "rwkv.cm.wk"))))
+    return L.apply_linear(k, p["wv"],
+                          L.module_quant(cfg, "rwkv.cm.wv")), x[:, -1, :]
 
 
 def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import pann as pann_core
+from repro.core import policy as pol
 from repro.dist import sharding as shardlib
 
 # projection parents whose "w" is PANN-quantized for serving
@@ -34,6 +35,7 @@ _QUANT_PARENTS = {
 def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 r: float | None = None,
                                 act_bits: int | None = None,
+                                policy: Optional[pol.PolicyTree] = None,
                                 store_dtype=jnp.int8) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
@@ -44,34 +46,49 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     bit width; it is a data leaf, not a shape/dtype change, so serve-engine
     rungs with different b~x still share one compiled decode step. Without
     ``act_bits`` the artifact is W-PANN-only (activations in compute dtype),
-    the legacy single-point behavior."""
-    r = r if r is not None else cfg.quant.r
+    the legacy single-point behavior.
 
-    def walk(node, name=""):
+    ``policy`` (a ``core.policy.PolicyTree``) quantizes each projection at
+    ITS OWN (R, b~x): the key trail through the pytree is mapped to the
+    canonical module path (``policy.serving_path``) and the looked-up
+    ``ModuleQuant`` supplies that projection's point. Since only leaf
+    VALUES change — never shapes, dtypes, or the tree structure — a
+    layerwise variant shares the decode-step compilation with every uniform
+    variant (the serve_engine invariant)."""
+    if policy is None:
+        r = r if r is not None else cfg.quant.r
+
+    def walk(node, trail=()):
         if isinstance(node, dict):
+            name = trail[-1] if trail else ""
             if "w" in node and name in _QUANT_PARENTS \
                     and getattr(node["w"], "ndim", 0) >= 2:
                 w = node["w"]
+                if policy is not None:
+                    mq = policy.lookup(pol.serving_path(trail))
+                    r_mod, ab = mq.r, mq.b_x_tilde
+                else:
+                    r_mod, ab = r, act_bits
                 w_q, gamma = pann_core.pann_quantize(
-                    w.astype(jnp.float32), r, axis=w.ndim - 2)
+                    w.astype(jnp.float32), float(r_mod), axis=w.ndim - 2)
                 out = {
                     "w_q": jnp.clip(w_q, -127, 127).astype(store_dtype),
                     "w_scale": gamma.astype(jnp.float32),
                 }
-                if act_bits is not None:
+                if ab is not None:
                     # match the weight's stack dims (e.g. the vmapped group
                     # axis) so scanned decode bodies can slice it per group
                     out["act_n"] = jnp.full(w.shape[:-2],
-                                            float((1 << int(act_bits)) - 1),
+                                            float((1 << int(ab)) - 1),
                                             jnp.float32)
                 if "b" in node:
                     out["b"] = node["b"]
                 return out
-            return {k: walk(v, k) for k, v in node.items()}
+            return {k: walk(v, trail + (k,)) for k, v in node.items()}
         if isinstance(node, list):
-            return [walk(v, name) for v in node]
+            return [walk(v, trail) for v in node]
         if isinstance(node, tuple):
-            return tuple(walk(v, name) for v in node)
+            return tuple(walk(v, trail) for v in node)
         return node
 
     return walk(params)
@@ -99,21 +116,26 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     """Materialize one int8 weight-code variant per operating point.
 
     ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
-    rung's PANN addition budget R, or to ``(R, b~x)`` to also quantize
-    activations at the rung's bit width. All variants share one pytree
-    structure and one set of avals (b~x is stored as data, not shape), so a
-    single jitted decode step serves every rung — switching rungs is a
-    pointer swap, never a retrace. With a ``mesh``, each variant is
-    device_put with the training-param layout so the cache scales past one
-    device instead of replicating N ladders.
+    rung's PANN addition budget R, to ``(R, b~x)`` to also quantize
+    activations at the rung's bit width, or to a ``core.policy.PolicyTree``
+    for a layerwise rung (each projection at its own per-module (R, b~x)).
+    All variants share one pytree structure and one set of avals (b~x is
+    stored as data, not shape), so a single jitted decode step serves every
+    rung — switching rungs is a pointer swap, never a retrace. With a
+    ``mesh``, each variant is device_put with the training-param layout so
+    the cache scales past one device instead of replicating N ladders.
     """
     cache = {}
     shardings = None
     for key, spec in r_by_rung.items():
-        r, act_bits = spec if isinstance(spec, tuple) else (spec, None)
-        v = quantize_params_for_serving(params, cfg, r=float(r),
-                                        act_bits=act_bits,
-                                        store_dtype=store_dtype)
+        if isinstance(spec, pol.PolicyTree):
+            v = quantize_params_for_serving(params, cfg, policy=spec,
+                                            store_dtype=store_dtype)
+        else:
+            r, act_bits = spec if isinstance(spec, tuple) else (spec, None)
+            v = quantize_params_for_serving(params, cfg, r=float(r),
+                                            act_bits=act_bits,
+                                            store_dtype=store_dtype)
         if mesh is not None:
             if shardings is None:     # variants share avals: compute once
                 shardings = variant_shardings(v, mesh, par)

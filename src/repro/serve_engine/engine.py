@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import costs
+from repro.core import policy as pol
 from repro.core import power as pw
 from repro.models import model as MD
 from repro.models import serving
@@ -50,6 +51,7 @@ class ServeEngine:
                  ladder_bits: Sequence[int] = (2, 3, 4, 6),
                  max_batch: int = 4, max_len: int = 64, mesh=None,
                  par=None, mse_dim: Optional[float] = None,
+                 allocation: str = "uniform",
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
@@ -58,17 +60,28 @@ class ServeEngine:
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.max_len = int(max_len)
+        self.allocation = allocation
+        # the per-module MAC profile: feeds the layerwise allocator AND the
+        # per-module energy breakdown on every response (either allocation)
+        self.profile = costs.module_cost_profile(cfg)
         self.ladder = build_ladder(ladder_bits,
-                                   d=float(mse_dim or cfg.d_model))
+                                   d=float(mse_dim or cfg.d_model),
+                                   allocation=allocation,
+                                   profile=self.profile)
         self.rungs = {op.bits: op for op in self.ladder}
         # the variant cache: int8 weight codes per rung, activations
         # quantized at the rung's b~x (stored as data so rungs share one
-        # compilation), sharded like training params on a mesh
+        # compilation), sharded like training params on a mesh; a layerwise
+        # rung materializes per-module (R, b~x) codes via its PolicyTree —
+        # same pytree structure and avals, so it still shares the one
+        # compiled decode step with every uniform rung
         # par: the training ParallelConfig, so an FSDP-trained layout and
         # the serving cache layout can't drift apart
         self.variants = serving.build_variant_cache(
-            params, cfg, {op.bits: (op.r, op.b_x_tilde)
-                          for op in self.ladder}, mesh=mesh, par=par)
+            params, cfg,
+            {op.bits: (op.tree if op.tree is not None
+                       else (op.r, op.b_x_tilde))
+             for op in self.ladder}, mesh=mesh, par=par)
         self._frontend_kwargs_fn = frontend_kwargs_fn
         self._step = jax.jit(lambda p, s, t: MD.decode_step(p, cfg, s, t))
         self.scheduler = Scheduler(self.ladder, self.max_batch)
@@ -167,24 +180,41 @@ class ServeEngine:
         return _Lane(wave=wave, state=state, tok=tok, generated=[tok],
                      steps_left=gen_max - 1)
 
+    def _rung_tree(self, rung) -> pol.PolicyTree:
+        """The rung's PolicyTree: its layerwise tree, or the uniform lift
+        of its single (b~x, R) point — one pricing path for both."""
+        if rung.tree is not None:
+            return rung.tree
+        return pol.uniform_policy(pol.ModuleQuant(
+            mode="pann", r=rung.r, b_x_tilde=rung.b_x_tilde))
+
+    def _ledger_for(self, rung, ctx: int) -> pw.EnergyLedger:
+        macs = self._macs_by_ctx.get(ctx)
+        if macs is None:
+            macs = self._macs_by_ctx.setdefault(
+                ctx, costs.macs_per_token(self.cfg, context_len=ctx))
+        total, breakdown = pol.tree_power_per_token(
+            self.profile, self._rung_tree(rung), act_macs=macs.act_macs)
+        if rung.tree is None:
+            # uniform rung: keep the legacy headline number bit-for-bit
+            # (same formula; the breakdown is the itemization of it)
+            total = pw.pann_token_bitflips(macs, rung.r, rung.b_x_tilde)
+        return pw.EnergyLedger(total, breakdown_per_token=breakdown)
+
     def _finalize(self, lane: _Lane) -> list[Response]:
         gen = np.asarray(jnp.concatenate(lane.generated, axis=1))
         rung = lane.wave.rung
         out = []
         for i, req in enumerate(lane.wave.requests):
             toks = gen[i, :req.max_new_tokens].tolist()
-            ctx = req.prompt_len + req.max_new_tokens
-            macs = self._macs_by_ctx.get(ctx)
-            if macs is None:
-                macs = self._macs_by_ctx.setdefault(
-                    ctx, costs.macs_per_token(self.cfg, context_len=ctx))
-            ledger = pw.EnergyLedger(
-                pw.pann_token_bitflips(macs, rung.r, rung.b_x_tilde))
+            ledger = self._ledger_for(rung, req.prompt_len
+                                      + req.max_new_tokens)
             ledger.charge(len(toks))
             meta = {
                 "rung_bits": rung.bits,
                 "b_x_tilde": rung.b_x_tilde,
                 "r": rung.r,
+                "allocation": rung.allocation,
                 "power_per_weight_mac": rung.power,
                 **ledger.report(),
             }
@@ -282,10 +312,14 @@ class ServeEngine:
     # -- reporting ----------------------------------------------------------
 
     def describe(self) -> dict:
+        total_macs = sum(m.macs for m in self.profile)
         return {
+            "allocation": self.allocation,
             "ladder": [{"bits": op.bits, "b_x_tilde": op.b_x_tilde,
                         "r": round(op.r, 3),
-                        "power_per_weight_mac": round(op.power, 2)}
+                        "power_per_weight_mac": round(op.power, 2),
+                        "total_gbitflips_per_token":
+                            round(pw.giga(op.power * total_macs), 3)}
                        for op in self.ladder],
             "max_batch": self.max_batch,
             "max_len": self.max_len,

@@ -5,6 +5,15 @@ power of a b-bit unsigned MAC" (Fig. 3). The ladder is a handful of rungs
 planned once at server startup; every request then names a rung indirectly,
 through a power budget or an accuracy floor, and the scheduler resolves it
 with ``select_rung``.
+
+Two allocation modes per rung (DESIGN.md §7):
+
+  * ``uniform`` — one global (b~x, R) for every module (the legacy rung);
+  * ``layerwise`` — a ``PolicyTree`` from ``planner.allocate_layerwise``
+    spending the SAME total bit-flip budget non-uniformly across module
+    paths. A layerwise rung's total power matches its uniform twin within
+    float precision and its theory score never trails it (asserted in
+    tests/test_policy_allocator.py).
 """
 from __future__ import annotations
 
@@ -12,13 +21,20 @@ import dataclasses
 from typing import Optional, Sequence
 
 from repro.core import planner
+from repro.core import policy as pol
 
 
 @dataclasses.dataclass(frozen=True)
 class OperatingPoint:
-    """One rung: the bit budget it matches and the planned PANN point."""
+    """One rung: the bit budget it matches and the planned PANN point.
+
+    ``lw`` holds the layerwise plan when the ladder was built with
+    ``allocation="layerwise"``; ``plan`` is always the matched uniform
+    Algorithm-1 point at the same budget (the rung's per-MAC power and the
+    fallback single-point view)."""
     bits: int                    # unsigned-MAC bit width this rung's power equals
     plan: planner.PannPlan
+    lw: Optional[planner.LayerwisePlan] = None
 
     @property
     def power(self) -> float:
@@ -34,20 +50,48 @@ class OperatingPoint:
 
     @property
     def score(self) -> float:
-        return self.plan.score
+        return self.lw.score if self.lw is not None else self.plan.score
+
+    @property
+    def allocation(self) -> str:
+        return "layerwise" if self.lw is not None else "uniform"
+
+    @property
+    def tree(self) -> Optional[pol.PolicyTree]:
+        """The rung's PolicyTree (None for a uniform rung)."""
+        return self.lw.tree if self.lw is not None else None
 
     def describe(self) -> str:
+        if self.lw is not None:
+            return f"rung[{self.bits}b] {self.lw.describe()}"
         return f"rung[{self.bits}b] {self.plan.describe()}"
 
 
 def build_ladder(bits: Sequence[int] = (2, 3, 4, 6), d: float = 4096.0,
-                 eval_fn=None) -> tuple[OperatingPoint, ...]:
+                 eval_fn=None, allocation: str = "uniform",
+                 profile: Optional[Sequence] = None
+                 ) -> tuple[OperatingPoint, ...]:
     """Plan the ladder, sorted by ascending power. Deterministic: a pure
-    function of (bits, d), so two servers configured alike agree rung for
-    rung (tested in tests/test_serve_engine.py)."""
+    function of its inputs, so two servers configured alike agree rung for
+    rung (tested in tests/test_serve_engine.py).
+
+    ``allocation="layerwise"`` needs ``profile`` (a
+    ``costs.module_cost_profile``); each rung then carries a PolicyTree
+    spending the rung's total budget across modules, plus its matched
+    uniform plan for comparison and logging. ``eval_fn`` (the Algorithm-1
+    per-(b~x, R) backend) is rejected for layerwise ladders rather than
+    silently dropped — every rung score on one ladder must come from ONE
+    metric, or ``select_rung``'s accuracy floors compare apples to oranges.
+    """
     sorted_bits = sorted({int(b) for b in bits})
-    plans = planner.plan_ladder(sorted_bits, d=d, eval_fn=eval_fn)
-    return tuple(OperatingPoint(b, p) for b, p in zip(sorted_bits, plans))
+    if allocation == "uniform":
+        plans = planner.plan_ladder(sorted_bits, d=d, eval_fn=eval_fn)
+        return tuple(OperatingPoint(b, p) for b, p in zip(sorted_bits, plans))
+    lw_plans = planner.plan_ladder(sorted_bits, d=d, eval_fn=eval_fn,
+                                   allocation=allocation, profile=profile)
+    plans = planner.plan_ladder(sorted_bits, d=d)   # theory metric, matched
+    return tuple(OperatingPoint(b, p, lw)
+                 for b, p, lw in zip(sorted_bits, plans, lw_plans))
 
 
 def select_rung(ladder: Sequence[OperatingPoint],

@@ -62,6 +62,24 @@ def test_model_flops_conventions():
     assert decode == pytest.approx(2 * n * 128)
 
 
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b", "gemma2-9b",
+                                  "zamba2-1.2b", "rwkv6-1.6b",
+                                  "seamless-m4t-medium",
+                                  "llama-3.2-vision-90b", "dbrx-132b"])
+def test_module_cost_profile_sums_to_weight_macs(arch):
+    """The per-module profile is the same account as macs_per_token's
+    weight side, just itemized — totals must agree to float precision."""
+    cfg = configs.get_config(arch)
+    profile = costs.module_cost_profile(cfg)
+    total = sum(m.macs for m in profile)
+    assert total == pytest.approx(
+        costs.macs_per_token(cfg).weight_macs, rel=1e-9)
+    assert all(m.macs > 0 and m.fan_in >= 1 for m in profile)
+    # paths stay within the canonical vocabulary (core/policy.py)
+    roots = {m.path.split(".")[0] for m in profile}
+    assert roots <= {"attn", "mlp", "moe", "ssm", "rwkv", "lm_head"}
+
+
 def test_macs_split_weight_vs_act():
     cfg = configs.get_config("llama3-8b")
     m = costs.macs_per_token(cfg, context_len=4096)

@@ -24,6 +24,18 @@ def test_power_planner_example_ladder_shape():
     assert prices == sorted(prices) and prices[0] > 0
 
 
+def test_layerwise_allocator_example():
+    mod = _load("layerwise_allocator")
+    out = mod.main(["--arch", "llama3-8b", "--ladder", "2,4,6"])
+    assert out["ladder_bits"] == [2, 4, 6]
+    assert len(out["plans"]) == 3
+    for lw in out["plans"]:
+        # the example's contract: budget parity + score dominance per rung
+        assert lw.score >= lw.uniform_score
+        assert abs(lw.total_power - lw.power_budget * out["total_macs"]) \
+            <= 0.01 * lw.total_power
+
+
 def test_serve_lm_example_ladder_serving():
     mod = _load("serve_lm")
     summary = mod.main(["--arch", "llama3-8b", "--gen", "8"])

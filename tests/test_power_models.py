@@ -143,6 +143,44 @@ def test_pann_budget_inversion():
             assert pw.p_pann(r, bx) == pytest.approx(p)
 
 
+def test_p_mult_mixed_edge_cases():
+    """Eq. (7) with b_w != b_x: dominated by max (Obs. 2), symmetric in its
+    arguments, and exactly Eq. (1) when the widths agree."""
+    # equal widths collapse to the signed model: 0.5 b^2 + 0.5 (b + b)
+    for b in (2, 4, 8):
+        assert pw.p_mult_mixed(b, b) == pytest.approx(pw.p_mult_signed(b))
+    # symmetry and the max-domination structure
+    assert pw.p_mult_mixed(2, 8) == pytest.approx(pw.p_mult_mixed(8, 2))
+    assert pw.p_mult_mixed(2, 8) == pytest.approx(0.5 * 64 + 0.5 * 10)
+    # shrinking only the narrow operand saves only the linear term
+    assert pw.p_mult_mixed(8, 8) - pw.p_mult_mixed(2, 8) \
+        == pytest.approx(0.5 * (8 - 2))
+    # extreme asymmetry: 1-bit weights against a wide activation
+    assert pw.p_mult_mixed(1, 8) == pytest.approx(0.5 * 64 + 4.5)
+    # and the mixed MAC uses the max width in its Eq.-2 accumulator term
+    assert pw.p_mac_mixed_signed(2, 8, 32) == \
+        pytest.approx(pw.p_mult_mixed(2, 8) + pw.p_acc_signed(8, 32))
+
+
+def test_required_acc_bits_edge_cases():
+    """Eq. (20) B = b_x + b_w + 1 + floor(log2(k^2 C_in)) off the Table-6
+    grid: b_w != b_x, tiny C_in, and k > 1 convolution fan-ins."""
+    # mixed widths contribute additively
+    assert pw.required_acc_bits(2, 8, 1024) == 2 + 8 + 1 + 10
+    assert pw.required_acc_bits(8, 2, 1024) == pw.required_acc_bits(2, 8,
+                                                                    1024)
+    # tiny C_in: fan_in 1 leaves just the b_x + b_w + 1 product width;
+    # fan_in 0 is guarded (a degenerate module, not a crash)
+    assert pw.required_acc_bits(4, 4, 1) == 9
+    assert pw.required_acc_bits(4, 4, 0) == 9
+    # k > 1 convs: fan_in = k^2 C_in, floor'd log2 (75 -> 6, not 6.23)
+    assert pw.required_acc_bits(4, 4, 5 * 5 * 3) == 4 + 4 + 1 + 6
+    assert pw.required_acc_bits(3, 5, 3 * 3 * 512) == 3 + 5 + 1 + 12
+    # non-power-of-two boundary: floor(log2(2^k - 1)) == k - 1
+    assert pw.required_acc_bits(4, 4, 1023) == 9 + 9
+    assert pw.required_acc_bits(4, 4, 1024) == 9 + 10
+
+
 def test_mac_power_reference_values():
     # Paper Sec. 3 example: b=4, B=32 -> P_mult + P_acc = 36, of which 16 = 44.4%
     assert pw.p_mac_signed(4, 32) == pytest.approx(36.0)
