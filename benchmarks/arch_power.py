@@ -7,7 +7,7 @@ import time
 
 from benchmarks.common import emit, save_json
 from repro import configs
-from repro.core import costs, planner
+from repro.core import costs
 from repro.core import power as pw
 
 

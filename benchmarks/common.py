@@ -5,7 +5,6 @@ import dataclasses
 import json
 import os
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp

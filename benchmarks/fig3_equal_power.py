@@ -5,7 +5,6 @@ import time
 
 from benchmarks.common import emit, save_json
 from repro.core import planner
-from repro.core import power as pw
 
 
 def run() -> dict:

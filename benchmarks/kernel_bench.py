@@ -1,30 +1,72 @@
-"""Pallas kernel micro-bench (interpret mode on CPU — correctness-path
-timing; real perf comes from the TPU dry-run roofline)."""
+"""Pallas kernel micro-bench + the CI kernel correctness gate.
+
+Two jobs in one script:
+
+  * timings — median us/call for every kernel and every serving-matmul
+    dispatch backend. On CPU the kernels run in interpret mode (emulation),
+    so timings are informational only; on TPU (``kernels.ops.on_tpu()``)
+    the same script measures the REAL kernels (interpret=False).
+  * ``--check`` — gate the platform-independent invariants against the
+    committed baseline (benchmarks/baselines/kernel_bench.json): backend
+    parity (ref / fused / packed bit-identical through repro.kernels.
+    dispatch; raw kernels vs the jnp oracles), artifact shapes, and HBM
+    bytes per weight per layout. Any parity or shape/HBM drift hard-fails;
+    timing drift never does. Refresh the baseline by copying
+    benchmarks/results/kernel_bench.json over it when the kernels
+    legitimately change.
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
+import argparse
+import json
+import os
+import sys
 
-from benchmarks.common import emit, save_json, time_call
-from repro.kernels import ops, ref
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit, save_json, time_call  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.kernels import dispatch, ops, ref  # noqa: E402
+from repro.kernels import pann_matmul as _pm  # noqa: E402
+from repro.kernels.pann_matmul_packed import (pack_planes,  # noqa: E402
+                                              pann_matmul_packed)
+from repro.models.serving import quantize_params_for_serving  # noqa: E402
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "kernel_bench.json")
 
 
-def run() -> dict:
+def _exact(a, b) -> dict:
+    """Parity record: bit-identical flag + max abs diff (0.0 when exact)."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return {"exact": bool((a == b).all()),
+            "max_abs_diff": float(np.abs(a - b).max())}
+
+
+def run(check: bool = False) -> dict:
+    interpret = not ops.on_tpu()     # measure REAL kernels on TPU
     rng = np.random.default_rng(0)
     m, k, n = 256, 512, 256
     x = jnp.abs(jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
     w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
     packed = ops.pann_pack_weights(w, r=2.0)
-    out = {}
+    p_cnt = int(packed["n_planes"])
+    timings: dict[str, float] = {}
 
     us = time_call(lambda: ops.pann_matmul(x, packed, act_bits=8,
-                                           interpret=True))
-    out["pann_matmul_fused"] = us
+                                           interpret=interpret))
+    timings["pann_matmul_fused"] = us
     emit("kernel_pann_matmul_fused", us, f"{m}x{k}x{n} int8 bitplane")
 
     us = time_call(lambda: ops.pann_matmul(x, packed, act_bits=8,
-                                           mode="planes", interpret=True))
-    out["pann_matmul_planes"] = us
+                                           mode="planes",
+                                           interpret=interpret))
+    timings["pann_matmul_planes"] = us
     emit("kernel_pann_matmul_planes", us, "literal Eq.10 dataflow")
 
     x_q = jnp.asarray(rng.integers(0, 127, (m, k)), jnp.int8)
@@ -32,32 +74,123 @@ def run() -> dict:
     s_x = jnp.ones((m, 1), jnp.float32)
     s_w = jnp.ones((n,), jnp.float32)
     us = time_call(lambda: ops.unsigned_matmul(x_q, w_q, s_x, s_w,
-                                               interpret=True))
-    out["unsigned_matmul"] = us
+                                               interpret=interpret))
+    timings["unsigned_matmul"] = us
     emit("kernel_unsigned_matmul", us, "Sec.4 split, int32 accum")
 
-    us = time_call(lambda: ops.quantize_act(x, bits=8, interpret=True))
-    out["quantize_act"] = us
+    us = time_call(lambda: ops.quantize_act(x, bits=8, interpret=interpret))
+    timings["quantize_act"] = us
     emit("kernel_quantize_act", us, "per-row scale + round + clip")
 
     us = time_call(lambda: ref.quantize_act_ref(x, 8))
-    out["quantize_act_ref"] = us
+    timings["quantize_act_ref"] = us
     emit("kernel_quantize_act_ref", us, "jnp oracle")
 
-    from repro.kernels.pann_matmul_packed import (pack_planes,
-                                                  pann_matmul_packed)
     pp = pack_planes(packed["planes_pos"])
     pn = pack_planes(packed["planes_neg"])
-    x_q = jnp.asarray(rng.integers(0, 128, (m, k)), jnp.int8)
-    s_x = jnp.ones((m, 1), jnp.float32)
+    x_q2 = jnp.asarray(rng.integers(0, 128, (m, k)), jnp.int8)
     us = time_call(lambda: pann_matmul_packed(
-        x_q, pp, pn, s_x, packed["gamma"], interpret=True))
-    out["pann_matmul_packed"] = us
+        x_q2, pp, pn, s_x, packed["gamma"], interpret=interpret))
+    timings["pann_matmul_packed"] = us
     emit("kernel_pann_matmul_packed", us,
-         f"{packed['n_planes']} planes at 1 bit/weight HBM")
-    save_json("kernel_bench.json", out)
+         f"{p_cnt} planes at 1 bit/weight HBM")
+
+    # --- the dispatch backends (the serving hot path) -----------------------
+    cfg = configs.reduced(configs.get_config("llama3-8b"))
+    leaf = quantize_params_for_serving(
+        {"wq": {"w": w}}, cfg, r=2.0, act_bits=8, pack_planes=True)["wq"]
+    xs = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    backends = ("ref", "fused" + (":force" if interpret else ""),
+                "packed" + (":force" if interpret else ""))
+    disp = {}
+    for spec in backends:
+        name = spec.split(":")[0]
+        us = time_call(lambda spec=spec: dispatch.serving_linear(
+            xs, leaf, spec))
+        timings[f"dispatch_{name}"] = us
+        disp[name] = np.asarray(dispatch.serving_linear(xs, leaf, spec))
+        emit(f"kernel_dispatch_{name}", us, "serving_linear backend")
+
+    # --- the gated invariants ----------------------------------------------
+    y_oracle = ref.pann_matmul_ref(x_q2, packed["planes_pos"],
+                                   packed["planes_neg"], s_x,
+                                   packed["gamma"])
+    y_kernel_fused = _pm.pann_matmul(
+        x_q2, packed["planes_pos"], packed["planes_neg"], s_x,
+        packed["gamma"], interpret=interpret)
+    y_kernel_planes = _pm.pann_matmul(
+        x_q2, packed["planes_pos"], packed["planes_neg"], s_x,
+        packed["gamma"], mode="planes", interpret=interpret)
+    y_kernel_packed = pann_matmul_packed(
+        x_q2, pp, pn, s_x, packed["gamma"], interpret=interpret)
+    yu_oracle = ref.unsigned_matmul_ref(x_q, w_q, s_x, s_w)
+    yu_kernel = ops.unsigned_matmul(x_q, w_q, s_x, s_w, interpret=interpret)
+
+    invariants = {
+        "shape": {"m": m, "k": k, "n": n, "n_planes": p_cnt,
+                  "packed_planes": list(pp.shape),
+                  "dispatch_planes": list(leaf["w_planes_pos"].shape)},
+        "hbm_bytes_per_weight": {
+            "f32": 4.0, "bf16": 2.0, "int8_codes": 1.0,
+            "planes_int8": float(2 * p_cnt),
+            "planes_packed": float(2 * p_cnt) / 8.0,
+        },
+        "parity": {
+            "kernel_fused_vs_oracle": _exact(y_kernel_fused, y_oracle),
+            "kernel_planes_vs_oracle": _exact(y_kernel_planes, y_oracle),
+            "kernel_packed_vs_oracle": _exact(y_kernel_packed, y_oracle),
+            "unsigned_vs_oracle": _exact(yu_kernel, yu_oracle),
+            "dispatch_fused_vs_ref": _exact(disp["fused"], disp["ref"]),
+            "dispatch_packed_vs_ref": _exact(disp["packed"], disp["ref"]),
+        },
+    }
+    out = {
+        "platform": "tpu" if ops.on_tpu() else "cpu",
+        "interpret": bool(interpret),
+        "timings_us": {kk: round(v, 1) for kk, v in timings.items()},
+        "invariants": invariants,
+    }
+    path = save_json("kernel_bench.json", out)
+    print(f"[kernel_bench] wrote {path}")
+    if check:
+        failures = check_baseline(out)
+        if failures:
+            for f in failures:
+                print(f"[kernel_bench] REGRESSION: {f}")
+            raise SystemExit(1)
+        print("[kernel_bench] baseline check passed")
     return out
 
 
+def check_baseline(result: dict, baseline_path: str = BASELINE) -> list[str]:
+    """Hard-fail parity / shape / HBM-bytes drift; timings stay advisory."""
+    failures = []
+    inv = result["invariants"]
+    for name, rec in inv["parity"].items():
+        if not rec["exact"]:
+            failures.append(f"parity broken: {name} "
+                            f"(max_abs_diff={rec['max_abs_diff']:g})")
+    with open(baseline_path) as f:
+        base = json.load(f)["invariants"]
+    for section in ("shape", "hbm_bytes_per_weight"):
+        if inv[section] != base[section]:
+            failures.append(
+                f"{section} drifted from baseline: {inv[section]} != "
+                f"{base[section]} — refresh {baseline_path} if intended")
+    missing = set(base["parity"]) - set(inv["parity"])
+    if missing:
+        failures.append(f"parity coverage shrank: {sorted(missing)} in the "
+                        f"baseline but not measured")
+    return failures
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="gate invariants against the committed baseline")
+    args = ap.parse_args(argv)
+    return run(check=args.check)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -10,13 +10,11 @@ Protocol (faithful to the paper, on our stand-in task):
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 from benchmarks.common import emit, eval_accuracy, save_json, train_small_lm
 from repro.configs.base import QuantConfig
 from repro.core import planner
-from repro.core import power as pw
 from repro.core import costs
 
 

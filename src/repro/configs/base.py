@@ -67,6 +67,10 @@ class ModelConfig:
     # --- serving ---
     kv_cache_dtype: str = ""      # "" = compute dtype; "float8_e4m3fn" halves
     #                               KV-cache bytes for decode (§Perf iter. 7)
+    # Serving-matmul backend for quantized (w_q) projections — None (legacy
+    # float dequant) | "ref" | "fused" | "packed" (repro.kernels.dispatch).
+    # Trace-time static: one jitted decode step per backend.
+    kernel_backend: Optional[str] = None
     # --- misc ---
     tie_embeddings: bool = False
     scale_embed: bool = False     # gemma2: multiply embeddings by sqrt(d)

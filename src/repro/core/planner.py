@@ -14,7 +14,6 @@ curves (Fig. 3) only changes (b~x, R) — no architecture change.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Iterable, Optional, Sequence
 
 from repro.core import mse as mse_theory

@@ -97,6 +97,35 @@ def fake_quant(x: Array, bits: int, signed: bool, axis=None,
     return x + jax.lax.stop_gradient(xq - x)
 
 
+def affine_quant_levels(x: Array, n, include_zero: bool = False
+                        ) -> Tuple[Array, Array, Array]:
+    """Asymmetric (zero-point) quantization: x ~ s * (q - z), q in [0, n].
+
+    The ONE copy of the affine numerics, shared by the model-level fake-quant
+    path (``models.layers``) and the integer serving backends
+    (``kernels.dispatch``) — the zero point z absorbs signed activations so
+    the integer codes q stay unsigned (DESIGN.md §4). ``n`` (the level count
+    2^b - 1) may be a Python int or a traced array. Returns (q, s, z) with q
+    float-typed exact integers.
+
+    ``include_zero`` extends the calibration range to contain 0 (the
+    TFLite/gemmlowp convention), which bounds the zero point to z in
+    [0, n]. The integer backends REQUIRE this: an activation tensor that
+    does not span zero (e.g. post-ReLU values near 100) otherwise yields
+    |z| ~ |lo|/s far outside int32, and z-derived integer corrections wrap.
+    The fp fake-quant paths keep the legacy unextended range.
+    """
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    if include_zero:
+        lo = jnp.minimum(lo, 0.0)
+        hi = jnp.maximum(hi, 0.0)
+    s = jnp.maximum((hi - lo) / n, 1e-12)
+    z = jnp.round(-lo / s)
+    q = jnp.clip(jnp.round(x / s) + z, 0, n)
+    return q, s, z
+
+
 # ---------------------------------------------------------------------------
 # Clip-calibrated quantization (ACIQ-style)
 # ---------------------------------------------------------------------------

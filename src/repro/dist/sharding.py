@@ -33,9 +33,11 @@ _ROW = {"wo", "w_down", "out_proj"}
 _COL = {"wq", "wk", "wv", "w_gate", "w_up", "router", "in_proj", "wr",
         "wg", "decay_a", "decay_b", "lm_head"}
 # dict keys that hold the actual weight array under a projection parent
-_WEIGHT_KEYS = {"w", "w_q"}
+# (w_planes_pos/neg: the bit-packed plane artifact for the 'packed' kernel
+# backend — (..., P, K/8, N), sharded by the parent's col/row rule on N/K8)
+_WEIGHT_KEYS = {"w", "w_q", "w_planes_pos", "w_planes_neg"}
 # leaves that are always replicated
-_REPLICATED_KEYS = {"b", "bias", "scale", "w_scale"}
+_REPLICATED_KEYS = {"b", "bias", "scale", "w_scale", "act_n", "w_colsum"}
 
 
 def _path_names(path) -> list[str]:

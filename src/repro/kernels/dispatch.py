@@ -1,0 +1,229 @@
+"""Pluggable backends for the serving matmul — the single choke point that
+turns the PANN deployment artifact ({"w_q", "w_scale", ...}; built by
+``models/serving.quantize_params_for_serving``) into projection outputs.
+
+Backends (selected per engine via ``ModelConfig.kernel_backend`` and threaded
+through ``models.layers.apply_linear``):
+
+  ``ref``     plain-jnp integer dataflow — runs on any platform; the oracle.
+  ``fused``   Pallas bit-plane matmul (``kernels/pann_matmul``, mode='fused'):
+              bit-planes are rebuilt from the int8 codes at trace time and
+              fed to one int8 MXU pass per tile.
+  ``packed``  Pallas packed-plane matmul (``kernels/pann_matmul_packed``):
+              reads the bit-packed ``w_planes_pos``/``w_planes_neg`` artifact
+              leaves (8 codes/byte along K — 2*P/8 bytes/weight HBM for plane
+              count P = the module's b_R), unpacking in VMEM.
+
+Every backend realizes the SAME integer dataflow, so their fp32 outputs are
+bit-identical (asserted in tests/test_kernel_dispatch.py, gated in CI by
+``benchmarks/kernel_bench.py --check``):
+
+  1. activations are affine-quantized to unsigned codes
+     ``q = clip(round(x/s) + z, 0, n)`` with ``n = min(act_n, 127)`` — the
+     zero point z absorbs signed transformer activations (DESIGN.md §4) and
+     n is capped at the kernels' half-range int8 code space (App. A.4);
+  2. ``y_int = q @ w_q - z * colsum(w_q) + round(b / (s*gamma))`` is
+     computed exactly in int32 (MXU pass or jnp; the kernels fuse the
+     combined zero-point/bias row ``zcol`` into the accumulator) — the
+     per-output-channel correction keeps the MACs genuinely unsigned
+     (Observation 1 / Eq. 5-6), and the bias lands on the output grid the
+     way integer inference engines add it;
+  3. ``y = y_int * s * gamma`` — two fp32 multiplies, identical
+     association everywhere, and nothing downstream for XLA to
+     fma-contract differently per backend.
+
+Fallback policy (``resolve_backend``): 'fused'/'packed' degrade to 'ref' off
+TPU, where the Pallas kernels would only be emulated. Appending ``:force`` (e.g.
+"packed:force") runs the Pallas kernel anyway — interpret mode off-TPU;
+slow, test/CI only, bit-identical by construction. Pad-to-block handling
+lives HERE, not in callers: inputs are padded to tile multiples with zero
+codes / zero planes (exact no-ops) and the result is sliced back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.pann import bitplane_decompose
+from repro.kernels import ops
+from repro.kernels import pann_matmul as _pm
+from repro.kernels import pann_matmul_packed as _pk
+
+Array = jax.Array
+
+BACKENDS = ("ref", "fused", "packed")
+
+# int8 serving codes are clipped to +-127 = 2^7 - 1, so 7 planes always
+# reconstruct them exactly — the envelope used when no packed artifact
+# pins the module's plane count.
+INT8_PLANES = 7
+
+# n = 2^7 - 1: the kernels' int8 lanes hold unsigned codes in [0, 127]
+# (the paper's App.-A.4 half-range convention), so b~x >= 8 operating
+# points run their activations at this ceiling inside the kernels.
+HALF_RANGE_LEVELS = 127.0
+
+
+def parse_backend(spec: str) -> tuple[str, bool]:
+    """'fused' -> ('fused', False); 'packed:force' -> ('packed', True)."""
+    name, _, opt = spec.partition(":")
+    if name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"have {BACKENDS}")
+    if opt not in ("", "force"):
+        raise ValueError(f"unknown backend option {opt!r} in {spec!r}; "
+                         "only ':force' (run Pallas in interpret mode "
+                         "off-TPU) is recognized")
+    return name, opt == "force"
+
+
+def resolve_backend(spec: str, p: dict) -> tuple[str, bool]:
+    """(effective backend, interpret flag) for artifact ``p`` on this host.
+
+    Non-TPU hosts without ':force' resolve to 'ref' (ragged shapes are not
+    misfits — padding below absorbs them). A 'packed' request against a
+    variant built without plane leaves is a build error, not a misfit —
+    raised, never silently degraded.
+    """
+    name, force = parse_backend(spec)
+    if name == "ref":
+        return "ref", False
+    if name == "packed" and "w_planes_pos" not in p:
+        raise ValueError(
+            "backend 'packed' needs the w_planes_pos/w_planes_neg artifact "
+            "leaves; build the variant with "
+            "quantize_params_for_serving(..., pack_planes=True)")
+    if not ops.on_tpu() and not force:
+        return "ref", False
+    return name, not ops.on_tpu()
+
+
+def _pick_bk(bk: int, mult: int) -> int:
+    """Largest multiple of ``mult`` <= bk (floor at ``mult``)."""
+    return max(mult, bk - bk % mult)
+
+
+def _matmul_ref(q8: Array, w_q: Array, s, gamma: Array, zcol: Array
+                ) -> Array:
+    """jnp oracle of the kernels' finalize: exact int32 matmul, exact int32
+    zero-point subtraction, then the identical fp32 multiply chain
+    (y * s * gamma, in that association)."""
+    y_int = jax.lax.dot_general(q8, w_q, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    return (y_int - zcol).astype(jnp.float32) * s * gamma
+
+
+def _matmul_fused(q8: Array, w_q: Array, s, gamma: Array, zcol: Array,
+                  n_planes: int, interpret: bool) -> Array:
+    """Bit-plane Pallas kernel on planes rebuilt from the int8 codes."""
+    pos = bitplane_decompose(jnp.maximum(w_q, 0), n_planes)
+    neg = bitplane_decompose(jnp.maximum(-w_q.astype(jnp.int32), 0),
+                             n_planes)
+    m, k = q8.shape
+    n = w_q.shape[-1]
+    bm, bn, bk = ops._pick_blocks(m, n, k)
+    xp = ops._pad_to(ops._pad_to(q8, bm, 0), bk, 1)
+    pp = ops._pad_to(ops._pad_to(pos, bk, 1), bn, 2)
+    pn = ops._pad_to(ops._pad_to(neg, bk, 1), bn, 2)
+    sx = jnp.broadcast_to(jnp.reshape(s, (1, 1)), (xp.shape[0], 1))
+    gp = ops._pad_to(gamma, bn, 0)
+    zp = ops._pad_to(zcol, bn, 0)
+    y = _pm.pann_matmul(xp, pp, pn, sx, gp, zp, mode="fused",
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n]
+
+
+def _matmul_packed(q8: Array, pp: Array, pn: Array, s, gamma: Array,
+                   zcol: Array, interpret: bool) -> Array:
+    """Packed-plane Pallas kernel on the uint8 artifact leaves."""
+    m, k = q8.shape
+    k_full = pp.shape[-2] * 8        # pack_planes padded K up to 8
+    n = pp.shape[-1]
+    bm, bn, bk = ops._pick_blocks(m, n, k_full)
+    bk = _pick_bk(bk, 8)             # the packed kernel needs bk % 8 == 0
+    xp = ops._pad_to(ops._pad_to(q8, bm, 0), bk, 1)
+    k_pad = xp.shape[1]
+    ppp = ops._pad_to(ops._pad_to(pp, k_pad // 8, 1), bn, 2)
+    pnp = ops._pad_to(ops._pad_to(pn, k_pad // 8, 1), bn, 2)
+    sx = jnp.broadcast_to(jnp.reshape(s, (1, 1)), (xp.shape[0], 1))
+    gp = ops._pad_to(gamma, bn, 0)
+    zp = ops._pad_to(zcol, bn, 0)
+    y = _pk.pann_matmul_packed(xp, ppp, pnp, sx, gp, zp,
+                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n]
+
+
+def serving_linear(x: Array, p: dict, backend: str) -> Array:
+    """The serving projection: y = affine-quant(x) @ deq(w_q) [+ b] through
+    the selected backend. ``p`` is one module's serving artifact (2-D w_q —
+    scan bodies slice stacked leaves before we ever see them).
+
+    Output dtype follows x; the fp32 result is bit-identical across
+    backends (module docstring). ``act_n`` (2^b~x - 1, a data leaf so
+    ladder rungs share one compilation) sets the activation levels; absent,
+    activations quantize at the 8-bit operating point's half-range.
+    """
+    name, interpret = resolve_backend(backend, p)
+    w_q = p["w_q"]
+    assert w_q.ndim == 2, (
+        f"serving_linear wants a per-layer (K, N) weight slice, got "
+        f"{w_q.shape} — scan bodies must slice stacked leaves first")
+    lead, k = x.shape[:-1], x.shape[-1]
+    n_out = w_q.shape[-1]
+
+    # entry barrier: seal the backend-specific subgraph off from upstream
+    # fusion/layout decisions, so the surrounding (graph-identical) program
+    # compiles the same way whichever backend sits between the barriers —
+    # the bit-exactness contract must survive jit, not just eager mode
+    xf = jax.lax.optimization_barrier(x.reshape(-1, k).astype(jnp.float32))
+    act_n = p.get("act_n")
+    if act_n is None:
+        n_lvl = jnp.float32(HALF_RANGE_LEVELS)
+    else:
+        n_lvl = jnp.minimum(
+            jnp.asarray(act_n, jnp.float32).reshape(()), HALF_RANGE_LEVELS)
+    # include_zero bounds z to [0, n]: without it, activations that do not
+    # span zero produce |z| far outside int32 and the zcol correction wraps
+    q, s, z = quant.affine_quant_levels(xf, n_lvl, include_zero=True)
+    # seal the quantization chain as well: left open, XLA folds it into the
+    # backend-specific consumer cluster (e.g. strength-reducing the x/s
+    # divide differently next to a dot than next to a pallas call) and the
+    # codes themselves stop matching across backends
+    q8, s, z = jax.lax.optimization_barrier(
+        (q.astype(jnp.int8), s, z))
+    gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
+    # the zero-point correction as an EXACT int32 row: s(q - z) @ (gamma*w)
+    # = s*gamma*(q @ w_q - z*colsum(w_q)). Subtracting inside the integer
+    # accumulator (kernels take zcol; the jnp oracle mirrors it) keeps the
+    # epilogue free of fp adds, which XLA would contract into backend-
+    # dependent fmas — the backends' bit-exactness depends on this.
+    # the artifact carries colsum precomputed (models/serving.py) so the
+    # packed backend never has to stream the full int8 code tensor just for
+    # this reduction; recomputing is the fallback for hand-built leaves
+    colsum = p.get("w_colsum")
+    if colsum is None:
+        colsum = jnp.sum(w_q.astype(jnp.int32), axis=-2)
+    zcol = z.astype(jnp.int32) * colsum
+    if "b" in p:
+        # bias joins the accumulator too, quantized onto the output grid
+        # s*gamma — the standard integer-inference bias treatment
+        # (gemmlowp/TFLite) and the only formulation whose rounding XLA
+        # cannot re-associate differently per backend (an fp "+ b" after
+        # the dequant multiplies gets fma-contracted next to a jnp dot but
+        # not next to a pallas call). Clipped so zcol - b_q stays well
+        # inside int32 whatever the scales are.
+        b_q = jnp.clip(jnp.round(p["b"].astype(jnp.float32) / (s * gamma)),
+                       -2.0 ** 30, 2.0 ** 30).astype(jnp.int32)
+        zcol = zcol - b_q
+
+    if name == "fused":
+        n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
+                    else INT8_PLANES)
+        y = _matmul_fused(q8, w_q, s, gamma, zcol, n_planes, interpret)
+    elif name == "packed":
+        y = _matmul_packed(q8, p["w_planes_pos"], p["w_planes_neg"],
+                           s, gamma, zcol, interpret)
+    else:
+        y = _matmul_ref(q8, w_q, s, gamma, zcol)
+    return y.reshape(*lead, n_out).astype(x.dtype)

@@ -8,8 +8,6 @@ Responsibilities:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -31,8 +31,9 @@ from jax.experimental.pallas import tpu as pltpu
 Array = jax.Array
 
 
-def _pann_matmul_kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref,
-                        acc_ref, *, n_planes: int, k_steps: int, mode: str):
+def _pann_matmul_kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, zcol_ref,
+                        o_ref, acc_ref, *, n_planes: int, k_steps: int,
+                        mode: str):
     """Grid = (M/bm, N/bn, K/bk); accumulates over the k dimension."""
     k = pl.program_id(2)
 
@@ -64,28 +65,36 @@ def _pann_matmul_kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref,
 
     @pl.when(k == k_steps - 1)
     def _finalize():
-        y = acc_ref[...].astype(jnp.float32)
+        # the zero-point correction lands in the EXACT int32 accumulator
+        # domain (kernels/dispatch: zcol = z * colsum(w_q)); only the two
+        # dequant multiplies round
+        y = (acc_ref[...] - zcol_ref[...]).astype(jnp.float32)
         o_ref[...] = y * sx_ref[...] * gamma_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
                                              "interpret"))
 def pann_matmul(x_q: Array, planes_pos: Array, planes_neg: Array,
-                s_x: Array, gamma: Array, *, mode: str = "fused",
-                bm: int = 128, bn: int = 128, bk: int = 128,
-                interpret: bool = True) -> Array:
-    """y[m, n] = (x_q @ (W+ - W-))[m, n] * s_x[m] * gamma[n].
+                s_x: Array, gamma: Array, zcol: Array | None = None, *,
+                mode: str = "fused", bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = True) -> Array:
+    """y[m, n] = ((x_q @ (W+ - W-))[m, n] - zcol[n]) * s_x[m] * gamma[n].
 
     x_q:        (M, K) int8, unsigned activation codes
     planes_pos: (P, K, N) int8 in {0, 1}
     planes_neg: (P, K, N) int8 in {0, 1}
     s_x:        (M, 1) f32 per-row activation scales
     gamma:      (N,)  f32 per-channel PANN steps
+    zcol:       (N,) int32 zero-point row (z * colsum(w_q); None = 0) —
+                the asymmetric-activation correction fused into the
+                accumulator before dequant (DESIGN.md §4)
     """
     m, k = x_q.shape
     p, k2, n = planes_pos.shape
     assert k == k2 and planes_neg.shape == planes_pos.shape
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    if zcol is None:
+        zcol = jnp.zeros((n,), jnp.int32)
     k_steps = k // bk
     grid = (m // bm, n // bn, k_steps)
 
@@ -100,9 +109,11 @@ def pann_matmul(x_q: Array, planes_pos: Array, planes_neg: Array,
             pl.BlockSpec((p, bk, bn), lambda i, j, kk: (0, kk, j)),
             pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, planes_pos, planes_neg, s_x, gamma.reshape(1, -1))
+    )(x_q, planes_pos, planes_neg, s_x, gamma.reshape(1, -1),
+      zcol.reshape(1, -1))

@@ -22,27 +22,34 @@ Array = jax.Array
 
 
 def pack_planes(planes: Array) -> Array:
-    """(P, K, N) {0,1} int8 -> (P, K/8, N) uint8 (K padded to 8)."""
-    p, k, n = planes.shape
+    """(..., K, N) {0,1} int8 -> (..., K/8, N) uint8 (K padded to 8).
+
+    Packing runs along axis -2 (the reduction dim); any leading dims —
+    the plane axis, and for serving artifacts the scan-stacked layer/group
+    dims, which must stay leading so ``lax.scan`` slices them — pass
+    through untouched. packed[..., k8, n] holds bit (k8*8 + j) in bit j.
+    """
+    *lead, k, n = planes.shape
     pad = (-k) % 8
     if pad:
-        planes = jnp.pad(planes, ((0, 0), (0, pad), (0, 0)))
+        planes = jnp.pad(planes,
+                         [(0, 0)] * len(lead) + [(0, pad), (0, 0)])
         k += pad
-    bits = planes.reshape(p, k // 8, 8, n).astype(jnp.uint8)
-    weights = (1 << jnp.arange(8, dtype=jnp.uint8)).reshape(1, 1, 8, 1)
-    return jnp.sum(bits * weights, axis=2).astype(jnp.uint8)
+    bits = planes.reshape(*lead, k // 8, 8, n).astype(jnp.uint8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint8)).reshape(8, 1)
+    return jnp.sum(bits * weights, axis=-2).astype(jnp.uint8)
 
 
 def unpack_planes(packed: Array, k: int) -> Array:
     """Inverse of pack_planes (reference / in-kernel helper)."""
-    p, k8, n = packed.shape
-    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 1, 8, 1)
-    bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)
-    return bits.reshape(p, k8 * 8, n)[:, :k, :].astype(jnp.int8)
+    *lead, k8, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(8, 1)
+    bits = (packed[..., :, None, :] >> shifts) & jnp.uint8(1)
+    return bits.reshape(*lead, k8 * 8, n)[..., :k, :].astype(jnp.int8)
 
 
-def _kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref, acc_ref, *,
-            n_planes: int, k_steps: int):
+def _kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, zcol_ref, o_ref,
+            acc_ref, *, n_planes: int, k_steps: int):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -66,23 +73,27 @@ def _kernel(x_ref, pos_ref, neg_ref, sx_ref, gamma_ref, o_ref, acc_ref, *,
 
     @pl.when(kk == k_steps - 1)
     def _done():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+        o_ref[...] = ((acc_ref[...] - zcol_ref[...]).astype(jnp.float32)
                       * sx_ref[...] * gamma_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def pann_matmul_packed(x_q: Array, packed_pos: Array, packed_neg: Array,
-                       s_x: Array, gamma: Array, *, bm: int = 128,
-                       bn: int = 128, bk: int = 128,
+                       s_x: Array, gamma: Array, zcol: Array | None = None,
+                       *, bm: int = 128, bn: int = 128, bk: int = 128,
                        interpret: bool = True) -> Array:
-    """y = (x_q @ (W+ - W-)) * s_x * gamma with bit-packed planes.
+    """y = ((x_q @ (W+ - W-)) - zcol) * s_x * gamma with bit-packed planes.
 
     x_q (M, K) int8; packed_pos/neg (P, K/8, N) uint8; K % bk == 0, bk % 8.
+    zcol (N,) int32: zero-point row (z * colsum(w_q); None = 0), subtracted
+    in the exact int32 accumulator before the fused dequant.
     """
     m, k = x_q.shape
     p, k8, n = packed_pos.shape
     assert k8 * 8 == k and bk % 8 == 0
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    if zcol is None:
+        zcol = jnp.zeros((n,), jnp.int32)
     k_steps = k // bk
     kernel = functools.partial(_kernel, n_planes=p, k_steps=k_steps)
     return pl.pallas_call(
@@ -94,9 +105,11 @@ def pann_matmul_packed(x_q: Array, packed_pos: Array, packed_neg: Array,
             pl.BlockSpec((p, bk // 8, bn), lambda i, j, kk: (0, kk, j)),
             pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, packed_pos, packed_neg, s_x, gamma.reshape(1, -1))
+    )(x_q, packed_pos, packed_neg, s_x, gamma.reshape(1, -1),
+      zcol.reshape(1, -1))

@@ -27,9 +27,10 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import QuantConfig
-from repro.core import costs, planner, power
-from repro.data.pipeline import SyntheticLM, frontend_stub
+from repro.core import costs, planner
+from repro.data.pipeline import frontend_stub
 from repro.models import model as MD
+from repro.models import serving
 from repro.serve_engine import Request, ServeEngine
 
 
@@ -69,6 +70,7 @@ def serve_ladder(args) -> dict:
     engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
                          max_batch=args.batch, max_len=max_len,
                          allocation=args.allocation,
+                         backend=args.backend or None,
                          frontend_kwargs_fn=fe_fn)
     engine.warmup()
     total_macs = sum(m.macs for m in engine.profile)
@@ -129,6 +131,17 @@ def main(argv=None) -> dict:
                          "rung, or a per-module PolicyTree spending the "
                          "same total power layer-wise "
                          "(planner.allocate_layerwise)")
+    ap.add_argument("--backend", default="",
+                    choices=["", "ref", "fused", "packed", "fused:force",
+                             "packed:force"],
+                    help="serving-matmul backend (repro.kernels.dispatch): "
+                         "ref (jnp integer oracle), fused (Pallas bit-plane "
+                         "MXU matmul), packed (bit-packed planes, 8 "
+                         "codes/byte along K); ':force' runs Pallas in "
+                         "interpret mode off-TPU. Empty = legacy float "
+                         "dequant. With --quant pann (no ladder) the "
+                         "weights are materialized as the serving artifact "
+                         "and decode runs through the chosen backend.")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")
@@ -154,6 +167,19 @@ def main(argv=None) -> dict:
     cfg = dataclasses.replace(cfg, quant=qc)
 
     params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.backend:
+        # route the single operating point through a kernel backend: weights
+        # become the serving artifact (int8 codes; packed plane leaves for
+        # 'packed' at the module's value-exact b_R) and every projection in
+        # the decode loop below dispatches through repro.kernels.dispatch
+        if args.quant != "pann":
+            raise SystemExit("--backend serves the PANN deployment artifact;"
+                             " combine it with --quant pann (or use "
+                             "--power_ladder)")
+        params = serving.quantize_params_for_serving(
+            params, cfg, r=qc.r, act_bits=qc.act_bits_tilde,
+            pack_planes=args.backend.startswith("packed"))
+        cfg = dataclasses.replace(cfg, kernel_backend=args.backend)
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
@@ -193,6 +219,7 @@ def main(argv=None) -> dict:
     summary = {
         "arch": cfg.name,
         "quant": qc.mode,
+        "backend": args.backend or "legacy",
         "batch": args.batch,
         "generated": int(gen.shape[1]),
         "prefill_s": round(t_prefill, 3),

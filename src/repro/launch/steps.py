@@ -2,8 +2,7 @@
 trainer, the server, and the multi-pod dry-run."""
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,14 +12,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.configs.base import ParallelConfig, QuantConfig, TrainConfig

@@ -68,11 +68,14 @@ def _project_qkv(x: Array, kv_src: Array, p: dict, cfg: ModelConfig):
     hd = cfg.resolved_head_dim
     b, t, _ = x.shape
     s = kv_src.shape[1]
-    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq")) \
+    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq"),
+                       backend=cfg.kernel_backend) \
         .reshape(b, t, cfg.num_heads, hd)
-    k = L.apply_linear(kv_src, p["wk"], L.module_quant(cfg, "attn.wk")) \
+    k = L.apply_linear(kv_src, p["wk"], L.module_quant(cfg, "attn.wk"),
+                       backend=cfg.kernel_backend) \
         .reshape(b, s, cfg.num_kv_heads, hd)
-    v = L.apply_linear(kv_src, p["wv"], L.module_quant(cfg, "attn.wv")) \
+    v = L.apply_linear(kv_src, p["wv"], L.module_quant(cfg, "attn.wv"),
+                       backend=cfg.kernel_backend) \
         .reshape(b, s, cfg.num_kv_heads, hd)
     return q, k, v
 
@@ -194,7 +197,8 @@ def attend(x: Array, p: dict, cfg: ModelConfig, *,
                              window=window, softcap_val=cfg.attn_softcap,
                              unroll=cfg.unroll_loops)
     out = out.astype(x.dtype).reshape(b, t, -1)
-    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"))
+    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
+                          backend=cfg.kernel_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +265,8 @@ def decode_attend(x: Array, cache: KVCache, p: dict, cfg: ModelConfig, *,
                      v.astype(x.dtype), preferred_element_type=jnp.float32)
     out = C.constrain_spec(out.astype(x.dtype).reshape(b, 1, -1),
                            {0: batch_ax})
-    y = L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"))
+    y = L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
+                       backend=cfg.kernel_backend)
     return y, KVCache(k=k, v=v, length=pos + 1)
 
 
@@ -270,7 +275,8 @@ def cross_attend_cached(x: Array, enc_kv: tuple[Array, Array], p: dict,
     """Cross-attention against precomputed encoder/image K,V (decode path)."""
     b, t, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq")).reshape(
+    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq"),
+                       backend=cfg.kernel_backend).reshape(
         b, t, cfg.num_heads, hd)
     k, v = enc_kv
     g = cfg.num_heads // cfg.num_kv_heads
@@ -281,7 +287,8 @@ def cross_attend_cached(x: Array, enc_kv: tuple[Array, Array], p: dict,
     out = jnp.einsum("btkgs,bskh->btkgh", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     out = out.astype(x.dtype).reshape(b, t, -1)
-    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"))
+    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
+                          backend=cfg.kernel_backend)
 
 
 def project_cross_kv(enc: Array, p: dict, cfg: ModelConfig
@@ -289,8 +296,10 @@ def project_cross_kv(enc: Array, p: dict, cfg: ModelConfig
     """Project encoder outputs to (K, V) once; reused every decode step."""
     b, s, _ = enc.shape
     hd = cfg.resolved_head_dim
-    k = L.apply_linear(enc, p["wk"], L.module_quant(cfg, "attn.wk")).reshape(
+    k = L.apply_linear(enc, p["wk"], L.module_quant(cfg, "attn.wk"),
+                       backend=cfg.kernel_backend).reshape(
         b, s, cfg.num_kv_heads, hd)
-    v = L.apply_linear(enc, p["wv"], L.module_quant(cfg, "attn.wv")).reshape(
+    v = L.apply_linear(enc, p["wv"], L.module_quant(cfg, "attn.wv"),
+                       backend=cfg.kernel_backend).reshape(
         b, s, cfg.num_kv_heads, hd)
     return k, v

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import pann as pann_core
 from repro.core import quant
+from repro.kernels import dispatch
 
 Array = jax.Array
 
@@ -62,20 +63,12 @@ def softcap(x: Array, cap: float) -> Array:
 # Asymmetric (zero-point) activation quantization
 # ---------------------------------------------------------------------------
 
-def _affine_quant_levels(x: Array, n) -> tuple[Array, Array, Array]:
-    """The one copy of the affine quantization numerics; ``n`` (the level
-    count) may be a Python int or a traced array."""
-    lo = jnp.min(x)
-    hi = jnp.max(x)
-    s = jnp.maximum((hi - lo) / n, 1e-12)
-    z = jnp.round(-lo / s)
-    q = jnp.clip(jnp.round(x / s) + z, 0, n)
-    return q, s, z
-
-
 def affine_act_quant(x: Array, bits: int):
-    """x ~= s * (q - z), q unsigned in [0, 2^b - 1]. Returns (q, s, z)."""
-    return _affine_quant_levels(x, (1 << bits) - 1)
+    """x ~= s * (q - z), q unsigned in [0, 2^b - 1]. Returns (q, s, z).
+
+    The numerics live in ``core.quant.affine_quant_levels`` — one copy
+    shared with the integer serving backends (``kernels.dispatch``)."""
+    return quant.affine_quant_levels(x, (1 << bits) - 1)
 
 
 def affine_fake_quant(x: Array, bits: int) -> Array:
@@ -91,7 +84,7 @@ def affine_fake_quant_n(x: Array, n: Array) -> Array:
     rungs with different b~x share one jit compilation — the whole point of
     the serve_engine's recompilation-free traversal."""
     xf = x.astype(jnp.float32)
-    q, s, z = _affine_quant_levels(xf, n)
+    q, s, z = quant.affine_quant_levels(xf, n)
     return (s * (q - z)).astype(x.dtype)
 
 
@@ -159,14 +152,23 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
     return p
 
 
-def apply_linear(x: Array, p: dict, qc) -> Array:
+def apply_linear(x: Array, p: dict, qc, backend: Optional[str] = None
+                 ) -> Array:
+    """The projection entry point. Training params route through ``qlinear``;
+    a serving artifact ("w_q" present) routes through the selected kernel
+    backend (``kernels.dispatch``: 'ref' | 'fused' | 'packed' — call sites
+    thread ``cfg.kernel_backend``), or through the legacy float dequant
+    below when ``backend`` is None (the pre-dispatch behavior, bit-exact).
+    """
     b = p.get("b")
     b = None if b is None else b.astype(x.dtype)
     if "w_q" in p:
-        # serving artifact (models/serving.py): PANN int codes + per-channel
-        # gamma, dequantized on load — weight-read bytes are the int8 codes.
-        # "act_n" (= 2^b~x - 1, a data leaf so rungs share one compilation)
-        # additionally quantizes activations at the operating point's b~x.
+        if backend is not None:
+            return dispatch.serving_linear(x, p, backend)
+        # legacy serving path (models/serving.py): PANN int codes +
+        # per-channel gamma, dequantized on load — weight-read bytes are the
+        # int8 codes. "act_n" (= 2^b~x - 1, a data leaf so rungs share one
+        # compilation) quantizes activations at the operating point's b~x.
         w = (p["w_q"].astype(jnp.float32)
              * p["w_scale"]).astype(x.dtype)
         if "act_n" in p:

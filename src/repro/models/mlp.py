@@ -38,12 +38,16 @@ def apply_mlp(x: Array, p: dict, cfg: ModelConfig) -> Array:
     if cfg.activation in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
         h = act(L.apply_linear(x, p["w_gate"],
-                               L.module_quant(cfg, "mlp.w_gate"))) \
-            * L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"))
+                               L.module_quant(cfg, "mlp.w_gate"),
+                               backend=cfg.kernel_backend)) \
+            * L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"),
+                             backend=cfg.kernel_backend)
     else:
         h = _act(cfg.activation)(
-            L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up")))
-    return L.apply_linear(h, p["w_down"], L.module_quant(cfg, "mlp.w_down"))
+            L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"),
+                           backend=cfg.kernel_backend))
+    return L.apply_linear(h, p["w_down"], L.module_quant(cfg, "mlp.w_down"),
+                          backend=cfg.kernel_backend)
 
 
 # ---------------------------------------------------------------------------

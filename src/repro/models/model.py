@@ -7,7 +7,6 @@ the same scan.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -137,7 +136,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
                            L.module_quant(cfg, "lm_head"))
     else:
         logits = L.apply_linear(x, params["lm_head"],
-                                L.module_quant(cfg, "lm_head"))
+                                L.module_quant(cfg, "lm_head"),
+                                backend=cfg.kernel_backend)
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     return ForwardOut(logits=logits, aux_loss=aux)
 
@@ -255,7 +255,8 @@ def decode_step(params: dict, cfg: ModelConfig, state: DecodeState,
                            L.module_quant(cfg, "lm_head"))
     else:
         logits = L.apply_linear(x, params["lm_head"],
-                                L.module_quant(cfg, "lm_head"))
+                                L.module_quant(cfg, "lm_head"),
+                                backend=cfg.kernel_backend)
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     return logits, DecodeState(caches=new_caches, cross_kv=state.cross_kv,
                                position=state.position + 1)

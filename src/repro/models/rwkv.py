@@ -100,23 +100,23 @@ def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
     def qc(name):
         return L.module_quant(cfg, f"rwkv.tm.{name}")
 
+    def lin(xv, w, name):
+        return L.apply_linear(xv, w, qc(name), backend=cfg.kernel_backend)
+
     prev = jnp.zeros((b, d), x.dtype) if state is None else \
         state.shift_tm.astype(x.dtype)
     xs = _token_shift(x, prev)
     mu = p["mu"].astype(x.dtype)
     mix = [x * mu[i] + xs * (1 - mu[i]) for i in range(5)]
     r = C.constrain_axis(
-        L.apply_linear(mix[0], p["wr"], qc("wr")).reshape(b, t, h,
-                                                          HEAD_DIM), 2)
+        lin(mix[0], p["wr"], "wr").reshape(b, t, h, HEAD_DIM), 2)
     k = C.constrain_axis(
-        L.apply_linear(mix[1], p["wk"], qc("wk")).reshape(b, t, h,
-                                                          HEAD_DIM), 2)
+        lin(mix[1], p["wk"], "wk").reshape(b, t, h, HEAD_DIM), 2)
     v = C.constrain_axis(
-        L.apply_linear(mix[2], p["wv"], qc("wv")).reshape(b, t, h,
-                                                          HEAD_DIM), 2)
-    g = jax.nn.silu(L.apply_linear(mix[3], p["wg"], qc("wg")))
-    dlow = jnp.tanh(L.apply_linear(mix[4], p["decay_a"], qc("decay_a")))
-    dd = L.apply_linear(dlow, p["decay_b"], qc("decay_b")) + p["decay_base"]
+        lin(mix[2], p["wv"], "wv").reshape(b, t, h, HEAD_DIM), 2)
+    g = jax.nn.silu(lin(mix[3], p["wg"], "wg"))
+    dlow = jnp.tanh(lin(mix[4], p["decay_a"], "decay_a"))
+    dd = lin(dlow, p["decay_b"], "decay_b") + p["decay_base"]
     w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(b, t, h, HEAD_DIM)
 
     s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32) if state is None \
@@ -126,7 +126,7 @@ def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
                                  p["bonus"], s0)
     out = out.reshape(b, t, d).astype(x.dtype)
     out = L.apply_norm(out, p["ln_x"], "layernorm") * g
-    return L.apply_linear(out, p["wo"], qc("wo")), s_fin, x[:, -1, :]
+    return lin(out, p["wo"], "wo"), s_fin, x[:, -1, :]
 
 
 def apply_channel_mix(x: Array, p: dict, cfg: ModelConfig,
@@ -137,9 +137,11 @@ def apply_channel_mix(x: Array, p: dict, cfg: ModelConfig,
     mu = p["mu"].astype(x.dtype)
     xk = x * mu[0] + xs * (1 - mu[0])
     k = jnp.square(jax.nn.relu(
-        L.apply_linear(xk, p["wk"], L.module_quant(cfg, "rwkv.cm.wk"))))
+        L.apply_linear(xk, p["wk"], L.module_quant(cfg, "rwkv.cm.wk"),
+                       backend=cfg.kernel_backend)))
     return L.apply_linear(k, p["wv"],
-                          L.module_quant(cfg, "rwkv.cm.wv")), x[:, -1, :]
+                          L.module_quant(cfg, "rwkv.cm.wv"),
+                          backend=cfg.kernel_backend), x[:, -1, :]
 
 
 def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import pann as pann_core
 from repro.core import policy as pol
+from repro.core.unsigned import unsigned_split
 from repro.dist import sharding as shardlib
+from repro.kernels.pann_matmul_packed import pack_planes
 
 # projection parents whose "w" is PANN-quantized for serving
 _QUANT_PARENTS = {
@@ -31,12 +33,38 @@ _QUANT_PARENTS = {
     "out_proj", "wr", "wg", "decay_a", "decay_b", "lm_head",
 }
 
+# Plane count used for ladder variant caches: int8 codes are clipped to
+# +-127 = 2^7 - 1, so 7 planes reconstruct EVERY rung's codes exactly AND
+# give every rung identical plane-leaf avals — the one-compiled-decode-step
+# invariant extends to the packed backend for free (values-only variants).
+LADDER_PLANE_COUNT = 7
+
+
+def _planes_artifact(codes, plane_count: int) -> dict:
+    """Bit-pack the unsigned split of int codes into the deployment layout
+    consumed by the 'packed' kernel backend (kernels/pann_matmul_packed).
+
+    codes: (..., K, N) ints. Returns uint8 leaves of shape
+    (..., P, ceil(K/8), N): the plane axis sits BEHIND any scan-stacked
+    layer/group dims so ``lax.scan`` still slices per-layer artifacts, and
+    K is the packed axis (8 codes/byte — 2*P/8 bytes per weight for both
+    signs).
+    """
+    pos, neg = unsigned_split(codes.astype(jnp.int32))
+    out = {}
+    for key, half in (("w_planes_pos", pos), ("w_planes_neg", neg)):
+        planes = pann_core.bitplane_decompose(half, plane_count)
+        out[key] = pack_planes(jnp.moveaxis(planes, 0, -3))
+    return out
+
 
 def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 r: float | None = None,
                                 act_bits: int | None = None,
                                 policy: Optional[pol.PolicyTree] = None,
-                                store_dtype=jnp.int8) -> Any:
+                                store_dtype=jnp.int8,
+                                pack_planes: bool = False,
+                                plane_count: Optional[int] = None) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
     embedding gather table stay in floating point (documented).
@@ -54,7 +82,17 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     ``ModuleQuant`` supplies that projection's point. Since only leaf
     VALUES change — never shapes, dtypes, or the tree structure — a
     layerwise variant shares the decode-step compilation with every uniform
-    variant (the serve_engine invariant)."""
+    variant (the serve_engine invariant).
+
+    ``pack_planes`` additionally materializes the bit-packed plane artifact
+    (``w_planes_pos``/``w_planes_neg`` uint8 leaves) the 'packed' kernel
+    backend reads — 2 * P / 8 bytes per weight for plane count P.
+    ``plane_count`` pins P; None derives each module's value-exact b_R
+    (minimal HBM, single-point artifacts), while ladder caches pass
+    ``LADDER_PLANE_COUNT`` so every rung shares plane-leaf avals. Codes are
+    clipped to the planes' +-(2^P - 1) envelope (a no-op at P = 7, the int8
+    range) so ``w_q`` and the planes always describe the SAME weights —
+    the backends' bit-exactness contract."""
     if policy is None:
         r = r if r is not None else cfg.quant.r
 
@@ -71,10 +109,23 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                     r_mod, ab = r, act_bits
                 w_q, gamma = pann_core.pann_quantize(
                     w.astype(jnp.float32), float(r_mod), axis=w.ndim - 2)
+                codes = jnp.clip(w_q, -127, 127)
+                if pack_planes:
+                    p_cnt = plane_count if plane_count is not None else \
+                        pann_core.weight_storage_bits(codes)
+                    cap = (1 << min(int(p_cnt), 7)) - 1
+                    codes = jnp.clip(codes, -cap, cap)
                 out = {
-                    "w_q": jnp.clip(w_q, -127, 127).astype(store_dtype),
+                    "w_q": codes.astype(store_dtype),
                     "w_scale": gamma.astype(jnp.float32),
+                    # per-output-channel code sum, precomputed so the kernel
+                    # backends' zero-point row (dispatch: zcol = z * colsum)
+                    # never re-reads the code tensor at decode time — for
+                    # 'packed' that read would dwarf the plane bytes
+                    "w_colsum": jnp.sum(codes.astype(jnp.int32), axis=-2),
                 }
+                if pack_planes:
+                    out.update(_planes_artifact(codes, int(p_cnt)))
                 if ab is not None:
                     # match the weight's stack dims (e.g. the vmapped group
                     # axis) so scanned decode bodies can slice it per group
@@ -112,7 +163,9 @@ def variant_shardings(variant: Any, mesh, par: Optional[ParallelConfig] = None
 def build_variant_cache(params: Any, cfg: ModelConfig,
                         r_by_rung: Mapping[Any, Any],
                         mesh=None, par: Optional[ParallelConfig] = None,
-                        store_dtype=jnp.int8) -> dict:
+                        store_dtype=jnp.int8,
+                        pack_planes: bool = False,
+                        plane_count: Optional[int] = None) -> dict:
     """Materialize one int8 weight-code variant per operating point.
 
     ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
@@ -124,18 +177,29 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     rung — switching rungs is a pointer swap, never a retrace. With a
     ``mesh``, each variant is device_put with the training-param layout so
     the cache scales past one device instead of replicating N ladders.
+
+    ``pack_planes`` adds the uint8 plane leaves for the 'packed' kernel
+    backend; callers must pin ``plane_count`` (e.g. ``LADDER_PLANE_COUNT``)
+    so every rung's plane leaves share avals — a value-exact per-rung count
+    would retrace the decode step at every rung switch.
     """
+    if pack_planes and plane_count is None and len(r_by_rung) > 1:
+        raise ValueError(
+            "pack_planes over multiple rungs needs a pinned plane_count "
+            "(e.g. serving.LADDER_PLANE_COUNT); per-rung value-exact plane "
+            "counts give rungs different avals and break the one-compiled-"
+            "decode-step invariant")
     cache = {}
     shardings = None
     for key, spec in r_by_rung.items():
+        kw = dict(store_dtype=store_dtype, pack_planes=pack_planes,
+                  plane_count=plane_count)
         if isinstance(spec, pol.PolicyTree):
-            v = quantize_params_for_serving(params, cfg, policy=spec,
-                                            store_dtype=store_dtype)
+            v = quantize_params_for_serving(params, cfg, policy=spec, **kw)
         else:
             r, act_bits = spec if isinstance(spec, tuple) else (spec, None)
             v = quantize_params_for_serving(params, cfg, r=float(r),
-                                            act_bits=act_bits,
-                                            store_dtype=store_dtype)
+                                            act_bits=act_bits, **kw)
         if mesh is not None:
             if shardings is None:     # variants share avals: compute once
                 shardings = variant_shardings(v, mesh, par)

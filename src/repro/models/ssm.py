@@ -146,7 +146,8 @@ def apply_ssm(x: Array, p: dict, cfg: ModelConfig) -> Array:
     """Training/prefill forward. x: (B, T, d) -> (B, T, d)."""
     d_inner, h, p_dim, n = _dims(cfg)
     zxbcdt = L.apply_linear(x, p["in_proj"],
-                            L.module_quant(cfg, "ssm.in_proj"))
+                            L.module_quant(cfg, "ssm.in_proj"),
+                            backend=cfg.kernel_backend)
     z, xs, b_ssm, c_ssm, dt = _split_proj(zxbcdt, cfg)
     conv_in = jnp.concatenate([xs, b_ssm, c_ssm], axis=-1)
     conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
@@ -158,7 +159,8 @@ def apply_ssm(x: Array, p: dict, cfg: ModelConfig) -> Array:
     y = y * jax.nn.silu(z)
     y = L.apply_norm(y, p["norm"], "rmsnorm")
     return L.apply_linear(y, p["out_proj"],
-                          L.module_quant(cfg, "ssm.out_proj"))
+                          L.module_quant(cfg, "ssm.out_proj"),
+                          backend=cfg.kernel_backend)
 
 
 def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
@@ -175,7 +177,8 @@ def decode_ssm(x: Array, st: SSMState, p: dict, cfg: ModelConfig
     """Single-token recurrent step. x: (B, 1, d)."""
     d_inner, h, p_dim, n = _dims(cfg)
     zxbcdt = L.apply_linear(x, p["in_proj"],
-                            L.module_quant(cfg, "ssm.in_proj"))
+                            L.module_quant(cfg, "ssm.in_proj"),
+                            backend=cfg.kernel_backend)
     z, xs, b_ssm, c_ssm, dt = _split_proj(zxbcdt, cfg)
     conv_in = jnp.concatenate([xs, b_ssm, c_ssm], axis=-1)   # (B, 1, C)
     conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
@@ -197,5 +200,6 @@ def decode_ssm(x: Array, st: SSMState, p: dict, cfg: ModelConfig
     y = y * jax.nn.silu(z)
     y = L.apply_norm(y, p["norm"], "rmsnorm")
     out = L.apply_linear(y, p["out_proj"],
-                         L.module_quant(cfg, "ssm.out_proj"))
+                         L.module_quant(cfg, "ssm.out_proj"),
+                         backend=cfg.kernel_backend)
     return out, SSMState(state=state, conv=new_tail, length=st.length + 1)

@@ -27,10 +27,10 @@ from repro.configs.base import ModelConfig
 from repro.core import costs
 from repro.core import policy as pol
 from repro.core import power as pw
+from repro.kernels import dispatch
 from repro.models import model as MD
 from repro.models import serving
-from repro.serve_engine.ladder import (OperatingPoint, build_ladder,
-                                       select_rung)
+from repro.serve_engine.ladder import build_ladder, select_rung
 from repro.serve_engine.scheduler import Request, Response, Scheduler, Wave
 
 
@@ -52,11 +52,19 @@ class ServeEngine:
                  max_batch: int = 4, max_len: int = 64, mesh=None,
                  par=None, mse_dim: Optional[float] = None,
                  allocation: str = "uniform",
+                 backend: Optional[str] = None,
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
                 f"{cfg.family} decode needs a frontend; pass "
                 "frontend_kwargs_fn(batch) -> init_decode_state kwargs")
+        # the serving-matmul backend (repro.kernels.dispatch) is trace-time
+        # static on the config: ONE jitted decode step per backend, still
+        # one per ENGINE — every rung of this ladder shares it
+        self.backend = backend
+        if backend is not None:
+            dispatch.parse_backend(backend)      # fail fast on typos
+            cfg = dataclasses.replace(cfg, kernel_backend=backend)
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.max_len = int(max_len)
@@ -77,11 +85,17 @@ class ServeEngine:
         # compiled decode step with every uniform rung
         # par: the training ParallelConfig, so an FSDP-trained layout and
         # the serving cache layout can't drift apart
+        # the 'packed' backend reads bit-packed plane leaves; the pinned
+        # LADDER_PLANE_COUNT keeps plane avals identical across rungs
+        needs_planes = (backend is not None
+                        and dispatch.parse_backend(backend)[0] == "packed")
         self.variants = serving.build_variant_cache(
             params, cfg,
             {op.bits: (op.tree if op.tree is not None
                        else (op.r, op.b_x_tilde))
-             for op in self.ladder}, mesh=mesh, par=par)
+             for op in self.ladder}, mesh=mesh, par=par,
+            pack_planes=needs_planes,
+            plane_count=serving.LADDER_PLANE_COUNT if needs_planes else None)
         self._frontend_kwargs_fn = frontend_kwargs_fn
         self._step = jax.jit(lambda p, s, t: MD.decode_step(p, cfg, s, t))
         self.scheduler = Scheduler(self.ladder, self.max_batch)
@@ -315,6 +329,7 @@ class ServeEngine:
         total_macs = sum(m.macs for m in self.profile)
         return {
             "allocation": self.allocation,
+            "backend": self.backend or "legacy",
             "ladder": [{"bits": op.bits, "b_x_tilde": op.b_x_tilde,
                         "r": round(op.r, 3),
                         "power_per_weight_mac": round(op.power, 2),

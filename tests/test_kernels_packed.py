@@ -44,3 +44,56 @@ def test_packed_storage_is_8x_smaller():
     packed = pack_planes(planes)
     assert packed.size * packed.dtype.itemsize \
         == planes.size * planes.dtype.itemsize // 8
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 7, 13, 8, 9, 127])
+def test_roundtrip_k_not_divisible_by_8(k):
+    planes = jnp.asarray(RNG.integers(0, 2, (3, k, 5)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.shape == (3, (k + 7) // 8, 5)
+    np.testing.assert_array_equal(np.asarray(unpack_planes(packed, k)),
+                                  np.asarray(planes))
+    # the padded tail bits must be zero, or matmuls against padded x rows
+    # would pick up phantom weights
+    full = unpack_planes(packed, packed.shape[-2] * 8)
+    np.testing.assert_array_equal(np.asarray(full[:, k:, :]), 0)
+
+
+def test_roundtrip_single_plane_b_r_1():
+    planes = jnp.asarray(RNG.integers(0, 2, (1, 16, 4)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.shape == (1, 2, 4)
+    np.testing.assert_array_equal(np.asarray(unpack_planes(packed, 16)),
+                                  np.asarray(planes))
+
+
+def test_roundtrip_empty_planes_all_zero_codes():
+    planes = jnp.zeros((4, 24, 6), jnp.int8)
+    packed = pack_planes(planes)
+    assert int(jnp.sum(packed)) == 0
+    np.testing.assert_array_equal(np.asarray(unpack_planes(packed, 24)), 0)
+
+
+def test_roundtrip_stacked_leading_dims():
+    """Serving artifacts stack planes behind scan dims: (L, P, K, N)."""
+    planes = jnp.asarray(RNG.integers(0, 2, (2, 3, 11, 4)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.shape == (2, 3, 2, 4)
+    np.testing.assert_array_equal(np.asarray(unpack_planes(packed, 11)),
+                                  np.asarray(planes))
+
+
+def test_dtype_invariants():
+    planes = jnp.asarray(RNG.integers(0, 2, (2, 9, 3)), jnp.int8)
+    packed = pack_planes(planes)
+    assert packed.dtype == jnp.uint8
+    un = unpack_planes(packed, 9)
+    assert un.dtype == jnp.int8
+    assert set(np.unique(np.asarray(un))) <= {0, 1}
+    # float-typed {0,1} planes pack identically (quantizer output dtype)
+    packed_f = pack_planes(planes.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(packed_f), np.asarray(packed))

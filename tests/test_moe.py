@@ -1,5 +1,4 @@
 """MoE: router properties + dense-scan vs capacity-dispatch equivalence."""
-import dataclasses
 import json
 import os
 import subprocess

@@ -5,11 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
 
 from repro.core import power as pw
 from repro.dist import sharding as SH
-from repro.launch.mesh import make_local_mesh
 
 # ---------------------------------------------------------------------------
 # greedy_spec invariants

@@ -2,8 +2,6 @@
 power (the paper's core claim), serving works, checkpoint-resume is exact."""
 import sys
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 sys.path.insert(0, ".")  # for benchmarks.common
