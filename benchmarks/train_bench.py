@@ -1,0 +1,154 @@
+"""CI train-smoke: a reduced power-aware QAT run, end to end through export.
+
+Runs ``launch/train.py --reduced`` with a layer-wise budget-annealing
+schedule, then exports the checkpoint (``launch/export.py``) and records:
+
+  * the loss trajectory (gated with tolerance — CPU BLAS variation across
+    runners moves losses at the 1e-5 level, real regressions at 1e-1),
+  * the planned Gbit-flips/token at every schedule knot (gated EXACTLY:
+    the allocator is deterministic Python float math, identical on every
+    platform — any drift is a planner/profile change),
+  * the export round-trip gap (gated: the serving artifact must reproduce
+    the training-time eval loss),
+  * wall-clock timings (informational only, like kernel_bench).
+
+``--check`` gates against benchmarks/baselines/train_bench.json; refresh
+the baseline by copying benchmarks/results/train_bench.json over it when
+training semantics legitimately change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import save_json  # noqa: E402
+from repro.launch import export as EX  # noqa: E402
+from repro.launch import train as TR  # noqa: E402
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "train_bench.json")
+
+# the smoke configuration: tiny, but crosses two budget knots (fp -> 8b ->
+# 6b) so replanning, calibration, and the re-jit path all execute
+SMOKE = dict(arch="llama3-8b", steps=18, batch=4, seq=64, lr=1e-2,
+             schedule="0:fp,4:8,12:6", allocation="layerwise")
+
+LOSS_RTOL = 0.05
+LOSS_ATOL = 0.02
+
+
+def run(check: bool = False) -> dict:
+    ckpt_dir = tempfile.mkdtemp(prefix="train_bench_ck_")
+    argv = ["--arch", SMOKE["arch"], "--reduced",
+            "--steps", str(SMOKE["steps"]),
+            "--batch", str(SMOKE["batch"]), "--seq", str(SMOKE["seq"]),
+            "--lr", str(SMOKE["lr"]),
+            "--quant", "pann", "--train_quant", "qat",
+            "--budget_schedule", SMOKE["schedule"],
+            "--allocation", SMOKE["allocation"],
+            "--ckpt_dir", ckpt_dir, "--ckpt_every", "1000",
+            "--log_every", "6"]
+    t0 = time.perf_counter()
+    summary = TR.main(argv)
+    train_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    export = EX.main(["--ckpt_dir", ckpt_dir])
+    export_s = time.perf_counter() - t0
+
+    out = {
+        "config": SMOKE,
+        "losses": summary["losses"],
+        "eval_loss": summary["eval_loss"],
+        "plans": summary["plans"],
+        "export": {"bits": export["bits"],
+                   "rel_diff": export["rel_diff"],
+                   "loss_serve_eval": export["loss_serve_eval"]},
+        "timings_s": {"train": round(train_s, 2),
+                      "export": round(export_s, 2),
+                      "mean_step": summary["mean_step_s"]},
+    }
+    path = save_json("train_bench.json", out)
+    print(f"[train_bench] wrote {path}")
+    if check:
+        failures = check_baseline(out)
+        if failures:
+            for f in failures:
+                print(f"[train_bench] REGRESSION: {f}")
+            raise SystemExit(1)
+        print("[train_bench] baseline check passed")
+    return out
+
+
+def check_baseline(result: dict, baseline_path: str = BASELINE) -> list[str]:
+    """Gate the loss trajectory (tolerance), the planned Gbit-flips
+    (exact), and the export round-trip; timings stay advisory."""
+    failures = []
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    if result["config"] != base["config"]:
+        failures.append(f"smoke config drifted: {result['config']} != "
+                        f"{base['config']} — refresh {baseline_path}")
+
+    # planned power: deterministic allocator output, bit-for-bit portable
+    if len(result["plans"]) != len(base["plans"]):
+        failures.append(f"schedule knot count changed: {result['plans']} "
+                        f"vs {base['plans']}")
+    else:
+        for got, want in zip(result["plans"], base["plans"]):
+            same = (got["step"] == want["step"]
+                    and got["bits"] == want["bits"]
+                    and np.isclose(got["gbitflips_per_token"],
+                                   want["gbitflips_per_token"],
+                                   rtol=1e-9, atol=0.0))
+            if not same:
+                failures.append(
+                    f"planned budget drifted at step {want['step']}: "
+                    f"{got} != {want} — allocator/profile change; refresh "
+                    f"the baseline if intended")
+
+    # loss trajectory: tolerant of BLAS-level noise, loud on real drift
+    got_l, want_l = result["losses"], base["losses"]
+    if len(got_l) != len(want_l):
+        failures.append(f"trajectory length {len(got_l)} != {len(want_l)}")
+    elif not np.allclose(got_l, want_l, rtol=LOSS_RTOL, atol=LOSS_ATOL):
+        worst = int(np.argmax(np.abs(np.array(got_l) - np.array(want_l))))
+        failures.append(
+            f"loss trajectory drifted (worst at step {worst}: "
+            f"{got_l[worst]:.4f} vs {want_l[worst]:.4f}, "
+            f"tol rtol={LOSS_RTOL}/atol={LOSS_ATOL})")
+    if not np.isclose(result["eval_loss"], base["eval_loss"],
+                      rtol=LOSS_RTOL, atol=LOSS_ATOL):
+        failures.append(f"eval loss drifted: {result['eval_loss']:.4f} vs "
+                        f"{base['eval_loss']:.4f}")
+
+    # the QAT run must still learn, and the export must still round-trip
+    if not result["losses"][-1] < result["losses"][0]:
+        failures.append("loss did not decrease over the smoke run")
+    if result["export"]["rel_diff"] > 1e-3:
+        failures.append(
+            f"export round-trip gap {result['export']['rel_diff']:.2e} "
+            f"> 1e-3: serving artifact no longer reproduces training")
+    return failures
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed baseline")
+    args = ap.parse_args(argv)
+    return run(check=args.check)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ def main():
     assert summary["last_loss"] < summary["first_loss"], "did not learn!"
     print(f"loss {summary['first_loss']:.3f} -> {summary['last_loss']:.3f} "
           f"over {summary['steps']} steps "
-          f"(p50 step {summary['p50_s']:.2f}s, "
+          f"(mean step {summary['mean_step_s']:.2f}s, "
           f"{summary['stragglers']} stragglers)")
 
 

@@ -42,18 +42,42 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten(template: Any, flat: dict[str, np.ndarray]) -> Any:
+def _may_fallback(key: str, strict) -> bool:
+    """strict=True: no leaf may be missing; strict=False: any may; a tuple
+    of key prefixes: only those subtrees may (everything else still errors,
+    so a truncated checkpoint can never masquerade as a resumable one)."""
+    if strict is True:
+        return False
+    if strict is False:
+        return True
+    return any(key.startswith(p) for p in strict)
+
+
+def _unflatten(template: Any, flat: dict[str, np.ndarray],
+               strict=True) -> Any:
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
+    fellback = []
     for path, leaf in paths_and_leaves:
         key = "/".join(_key_str(k) for k in path)
         if key not in flat:
+            if _may_fallback(key, strict):
+                # forward-compat resume: a state collection added after the
+                # checkpoint was written (e.g. the QAT calibration ranges
+                # on a pre-calibration checkpoint) keeps its template init
+                fellback.append(key)
+                leaves.append(np.asarray(leaf))
+                continue
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
                              f"vs template {leaf.shape}")
         leaves.append(arr)
+    if fellback:
+        print(f"[ckpt] {len(fellback)} leaves absent from the checkpoint "
+              f"kept their template init: {fellback[:8]}"
+              + (" ..." if len(fellback) > 8 else ""))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -103,16 +127,19 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: int, template: Any,
-            shardings: Optional[Any] = None) -> Any:
+            shardings: Optional[Any] = None, strict=True) -> Any:
     """Restore into ``template``'s structure; ``shardings`` (a matching
     pytree of NamedSharding) re-shards onto the *current* mesh — this is the
-    elastic-scaling path: the saving and restoring meshes may differ."""
+    elastic-scaling path: the saving and restoring meshes may differ.
+    ``strict`` may be a tuple of key prefixes (e.g. ``("calib/",)``) naming
+    the only subtrees allowed to keep their template init when absent from
+    the checkpoint; False allows any (logged), True (default) allows none."""
     path = os.path.join(directory, f"step_{step:08d}")
     if not os.path.exists(os.path.join(path, "COMMITTED")):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
-    tree = _unflatten(template, flat)
+    tree = _unflatten(template, flat, strict=strict)
     if shardings is not None:
         tree = jax.tree_util.tree_map(
             lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings)

@@ -146,3 +146,16 @@ class TrainConfig:
     warmup_steps: int = 100
     total_steps: int = 1000
     seed: int = 0
+    # --- power-aware QAT (DESIGN.md §9) ---
+    # Budget-annealing curriculum: "step:bits" knots, e.g. "0:fp,200:8,600:4"
+    # (core/anneal.py). None = a fixed operating point for the whole run.
+    budget_schedule: Optional[str] = None
+    # how each annealed budget is spent across modules: uniform | layerwise
+    budget_allocation: str = "layerwise"
+    # EMA decay of the activation-range calibration collection
+    calib_decay: float = 0.99
+    # LR re-warmup after each budget-tightening knot: ramp length in steps
+    # (0 = off) and the knot steps it applies at (set by the trainer from
+    # the parsed schedule; consumed by optim.cosine_warmup_schedule)
+    anneal_warmup_steps: int = 0
+    lr_rewarmup_knots: Tuple[int, ...] = ()

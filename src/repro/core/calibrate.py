@@ -1,0 +1,121 @@
+"""EMA activation-range calibration for power-aware QAT (DESIGN.md §9).
+
+PANN's operating points quantize activations at b̃x bits; the quantizer
+needs a range. During training the range of every projection input is
+*observed* (per-tensor min/max, merged across the depth of the scanned
+stack — module paths are roles, so all layers of a role share one range,
+exactly like they share one ``ModuleQuant``) and folded into an exponential
+moving average that lives in the train state as its own collection:
+
+    state.calib = {"attn.wq": [lo, hi], "mlp.w_down": [lo, hi], ...}
+
+The EMA range is fed back into the QAT forward (``quant.affine_from_range``)
+so training converges onto *static* activation quantizers, and is frozen
+into the serving artifact at export time (``models.serving.
+quantize_params_for_serving(calib=...)``) — the train→serve loop closes on
+the same numbers.
+
+Ranges start at the *unseen* sentinel [+inf, -inf]; every consumer treats
+lo > hi as "fall back to the dynamic per-tensor range" (bit-exact with the
+uncalibrated behavior), so warm-up needs no special casing and a module
+role that never runs (e.g. ``moe.router`` on a dense model) stays inert.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import costs
+
+Array = jax.Array
+
+# module roles that are not ``models.layers.apply_linear`` call sites and
+# therefore never observe activations (the depthwise conv reads no shared
+# activation tensor)
+_NON_LINEAR_PATHS = frozenset({"ssm.conv"})
+
+UNSEEN = (float("inf"), float("-inf"))
+
+
+def calib_paths(cfg: ModelConfig) -> Tuple[str, ...]:
+    """The module-path vocabulary calibrated for ``cfg``: every projection
+    role in the cost profile (plus ``lm_head``, present even when the
+    embedding is tied — the unembed matmul quantizes its input too)."""
+    paths = {m.path for m in costs.module_cost_profile(cfg)}
+    paths.add("lm_head")
+    return tuple(sorted(paths - _NON_LINEAR_PATHS))
+
+
+def init_calib(cfg: ModelConfig) -> Dict[str, Array]:
+    """Fresh calibration collection: every role at the unseen sentinel."""
+    return {p: jnp.asarray(UNSEEN, jnp.float32) for p in calib_paths(cfg)}
+
+
+def unseen_like(calib: Dict[str, Array]) -> Dict[str, Array]:
+    """An all-unseen observation accumulator with ``calib``'s structure —
+    the zero element of :func:`merge` (used as scan-carry init)."""
+    return {p: jnp.asarray(UNSEEN, jnp.float32) for p in calib}
+
+
+def seen(entry: Array) -> Array:
+    """Whether a [lo, hi] entry has observed anything (lo <= hi)."""
+    return entry[0] <= entry[1]
+
+
+def merge(into: Dict[str, Array], observed: Dict[str, Array]
+          ) -> Dict[str, Array]:
+    """Union of two observation dicts: elementwise min-lo / max-hi.
+
+    ``observed`` may cover a subset of ``into``'s keys (a stack only sees
+    its own roles); extra observed keys are ignored so the carry structure
+    stays fixed.
+    """
+    out = dict(into)
+    for path, obs in observed.items():
+        if path not in out:
+            continue
+        cur = out[path]
+        out[path] = jnp.stack([jnp.minimum(cur[0], obs[0]),
+                               jnp.maximum(cur[1], obs[1])])
+    return out
+
+
+def ema_update(calib: Dict[str, Array], observed: Optional[Dict[str, Array]],
+               decay: float) -> Dict[str, Array]:
+    """One EMA step of the calibration collection.
+
+    Per role: unseen observation -> keep the current range; first real
+    observation -> adopt it outright (no bias toward the inf sentinel);
+    otherwise new = decay * old + (1 - decay) * observed, elementwise on
+    [lo, hi]. Pure and deterministic — resuming from a checkpoint replays
+    the identical trajectory (asserted in tests/test_train_power.py).
+    """
+    if observed is None:
+        return calib
+    d = jnp.float32(decay)
+    out = {}
+    for path, cur in calib.items():
+        obs = observed.get(path)
+        if obs is None:
+            out[path] = cur
+            continue
+        ema = d * cur + (1.0 - d) * obs
+        new = jnp.where(seen(cur), ema, obs)
+        out[path] = jnp.where(seen(obs), new, cur)
+    return out
+
+
+def describe(calib: Optional[Dict[str, Array]]) -> str:
+    """Host-side rendering of a concrete collection (trainer end-of-run
+    log / export inspection — not for traced values)."""
+    if not calib:
+        return "calibration: off"
+    rows = []
+    for path, entry in sorted(calib.items()):
+        lo, hi = float(entry[0]), float(entry[1])
+        rows.append(f"  {path}: unseen" if lo > hi
+                    else f"  {path}: [{lo:+.4f}, {hi:+.4f}]")
+    return "\n".join(["calibration ranges:"] + rows)

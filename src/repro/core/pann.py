@@ -150,6 +150,36 @@ def pann_matmul_reference(x: Array, pw: PannWeights,
     return y_int * s_x * pw.gamma.reshape(-1)
 
 
+def pann_qat_matmul(x: Array, w: Array, mq, act_range: Optional[Array] = None
+                    ) -> Array:
+    """The QAT (STE) branch of a PANN projection at one *module's* operating
+    point — the per-module generalization the PolicyTree machinery feeds.
+
+    ``mq`` is anything exposing ``.r`` / ``.act_bits_tilde`` (a per-module
+    ``core.policy.ModuleQuant`` or the global ``QuantConfig``), so training
+    runs the exact (b̃x, R) points the serving ladder deploys.  ``act_range``
+    is an optional calibrated [lo, hi] pair (``core.calibrate``): when given
+    (and seen), activations quantize against the frozen EMA range — the same
+    numbers ``models.serving`` freezes into the export artifact; when absent
+    or unseen the dynamic per-tensor range applies, bit-exact with the
+    pre-calibration behavior.
+
+    Cast discipline matches ``models.layers.qlinear``: fake-quant in fp32,
+    matmul in the caller's compute dtype.
+    """
+    dtype = x.dtype
+    wq = pann_fake_quant(w.astype(jnp.float32), mq.r, axis=0).astype(dtype)
+    xf = x.astype(jnp.float32)
+    n = float((1 << mq.act_bits_tilde) - 1)
+    if act_range is None:
+        q, s, z = quant.affine_quant_levels(xf, n)
+    else:
+        q, s, z = quant.affine_from_range(xf, n, act_range[0], act_range[1])
+    xq_val = s * (q - z)
+    xq = (xf + jax.lax.stop_gradient(xq_val - xf)).astype(dtype)
+    return xq @ wq
+
+
 def pann_linear(x: Array, w: Array, bias: Optional[Array], r: float,
                 act_bits: int, *, axis=0, qat: bool = False) -> Array:
     """Model-level PANN linear layer.

@@ -120,10 +120,47 @@ def affine_quant_levels(x: Array, n, include_zero: bool = False
     if include_zero:
         lo = jnp.minimum(lo, 0.0)
         hi = jnp.maximum(hi, 0.0)
+    return _affine_from_bounds(x, n, lo, hi)
+
+
+def _affine_from_bounds(x: Array, n, lo: Array, hi: Array
+                        ) -> Tuple[Array, Array, Array]:
     s = jnp.maximum((hi - lo) / n, 1e-12)
     z = jnp.round(-lo / s)
     q = jnp.clip(jnp.round(x / s) + z, 0, n)
     return q, s, z
+
+
+def affine_from_range(x: Array, n, lo, hi, include_zero: bool = True
+                      ) -> Tuple[Array, Array, Array]:
+    """``affine_quant_levels`` with an explicit calibration range [lo, hi]
+    instead of the tensor's own extremes — the frozen-range path used by
+    calibrated QAT (EMA activation observers, ``core.calibrate``), by
+    exported serving artifacts (``act_lo``/``act_hi`` leaves), and by the
+    integer kernel backends, so every consumer shares one copy of the math
+    and quantizes a calibrated role against the SAME effective range.
+
+    ``include_zero`` (default on — every frozen-range consumer must agree)
+    extends a *seen* range to contain 0, the same TFLite convention as
+    ``affine_quant_levels(include_zero=True)``: it bounds z to [0, n],
+    which the integer backends require for int32 safety, so the fp paths
+    adopt it too or the export round-trip would validate numerics the
+    kernels don't serve.
+
+    An *unseen* range (lo > hi — the calibration sentinel) falls back to
+    the tensor's dynamic extremes WITHOUT the zero extension, bit-exact
+    with ``affine_quant_levels(x, n)``: calibration warm-up is numerically
+    the pre-calibration behavior.
+    """
+    lo = jnp.asarray(lo, x.dtype)
+    hi = jnp.asarray(hi, x.dtype)
+    use = lo <= hi
+    if include_zero:
+        lo = jnp.minimum(lo, 0.0)
+        hi = jnp.maximum(hi, 0.0)
+    lo = jnp.where(use, lo, jnp.min(x))
+    hi = jnp.where(use, hi, jnp.max(x))
+    return _affine_from_bounds(x, n, lo, hi)
 
 
 # ---------------------------------------------------------------------------

@@ -185,7 +185,22 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
             jnp.asarray(act_n, jnp.float32).reshape(()), HALF_RANGE_LEVELS)
     # include_zero bounds z to [0, n]: without it, activations that do not
     # span zero produce |z| far outside int32 and the zcol correction wraps
-    q, s, z = quant.affine_quant_levels(xf, n_lvl, include_zero=True)
+    act_lo = p.get("act_lo")
+    if act_lo is not None:
+        # export-frozen EMA calibration (models/serving.
+        # quantize_params_for_serving(calib=...)): quantize against the
+        # static training-time range. affine_from_range applies the same
+        # zero extension as the dynamic path below (z stays in [0, n]) and
+        # is the SAME function the QAT forward and the legacy serving
+        # branch use — one range convention everywhere. All backends share
+        # this one quantizer, so their bit-exactness contract holds for
+        # calibrated artifacts too.
+        q, s, z = quant.affine_from_range(
+            xf, n_lvl,
+            jnp.asarray(act_lo, jnp.float32).reshape(()),
+            jnp.asarray(p["act_hi"], jnp.float32).reshape(()))
+    else:
+        q, s, z = quant.affine_quant_levels(xf, n_lvl, include_zero=True)
     # seal the quantization chain as well: left open, XLA folds it into the
     # backend-specific consumer cluster (e.g. strength-reducing the x/s
     # divide differently next to a dot than next to a pallas call) and the

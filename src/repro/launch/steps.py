@@ -2,12 +2,13 @@
 trainer, the server, and the multi-pod dry-run."""
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.core import calibrate as CAL
 from repro.models import model as MD
 from repro.optim import optimizers as OPT
 
@@ -16,27 +17,44 @@ class TrainState(NamedTuple):
     params: Any
     opt: OPT.AdamWState
     step: jax.Array
+    # EMA activation-range collection ({path: [lo, hi]}, core/calibrate.py)
+    # for power-aware QAT; None when calibration is off. Checkpointed with
+    # the rest of the state so a mid-anneal resume is bit-exact.
+    calib: Any = None
 
 
-def make_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+def make_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+                     *, calibrate: bool = False) -> TrainState:
     params = MD.init_params(key, cfg)
     opt = OPT.AdamW(tcfg).init(params)
+    calib = CAL.init_calib(cfg) if calibrate else None
     return TrainState(params=params, opt=opt,
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), calib=calib)
 
 
 def train_step(state: TrainState, batch: dict, *, cfg: ModelConfig,
                tcfg: TrainConfig, par: ParallelConfig
                ) -> tuple[TrainState, dict]:
     """One optimizer step (data-parallel mean over the global batch is
-    implicit in the batch-sharded loss; GSPMD inserts the reduce)."""
+    implicit in the batch-sharded loss; GSPMD inserts the reduce).
+
+    With a calibration collection on the state, the forward quantizes
+    activations against the EMA ranges and reports this batch's observed
+    ranges, which fold back into the collection (``calibrate.ema_update``)
+    — quant/calibration state is part of the train state proper, so it is
+    donated, sharded, and checkpointed like params and optimizer moments.
+    """
     remat = par.remat != "none"
+    calib = state.calib
+    collect = calib is not None
 
     def loss_fn(params):
-        return MD.lm_loss(params, cfg, batch["tokens"], batch["labels"],
-                          enc_inputs=batch.get("enc_inputs"),
-                          image_embeds=batch.get("image_embeds"),
-                          remat=remat)
+        loss, obs = MD.lm_loss(params, cfg, batch["tokens"],
+                               batch["labels"],
+                               enc_inputs=batch.get("enc_inputs"),
+                               image_embeds=batch.get("image_embeds"),
+                               remat=remat, calib=calib, return_calib=True)
+        return loss, obs
 
     if par.microbatches > 1:
         b = batch["tokens"].shape[0]
@@ -49,31 +67,58 @@ def train_step(state: TrainState, batch: dict, *, cfg: ModelConfig,
             return MD.lm_loss(params, cfg, sl["tokens"], sl["labels"],
                               enc_inputs=sl.get("enc_inputs"),
                               image_embeds=sl.get("image_embeds"),
-                              remat=remat)
+                              remat=remat, calib=calib, return_calib=True)
 
         def loss_and_grad(params):
             def body(acc, i):
-                l, g = jax.value_and_grad(micro_loss)(params, i)
-                acc_l, acc_g = acc
+                (l, obs), g = jax.value_and_grad(micro_loss, has_aux=True)(
+                    params, i)
+                acc_l, acc_g, acc_obs = acc
+                merged = CAL.merge(acc_obs, obs) if collect else None
                 return (acc_l + l,
-                        jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+                        jax.tree_util.tree_map(jnp.add, acc_g, g),
+                        merged), None
 
             zero = (jnp.zeros(()),
                     jax.tree_util.tree_map(
-                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
-            (l, g), _ = jax.lax.scan(body, zero,
-                                     jnp.arange(par.microbatches))
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    CAL.unseen_like(calib) if collect else None)
+            (l, g, obs), _ = jax.lax.scan(body, zero,
+                                          jnp.arange(par.microbatches))
             n = float(par.microbatches)
-            return l / n, jax.tree_util.tree_map(lambda t: t / n, g)
+            return l / n, jax.tree_util.tree_map(lambda t: t / n, g), obs
 
-        loss, grads = loss_and_grad(state.params)
+        loss, grads, observed = loss_and_grad(state.params)
     else:
-        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        (loss, observed), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
 
     new_params, new_opt, metrics = OPT.AdamW(tcfg).update(
         grads, state.opt, state.params)
+    new_calib = CAL.ema_update(calib, observed, tcfg.calib_decay) \
+        if collect else None
     metrics = {"loss": loss, **metrics}
-    return TrainState(new_params, new_opt, state.step + 1), metrics
+    return TrainState(new_params, new_opt, state.step + 1, new_calib), \
+        metrics
+
+
+def eval_loss(params: Any, cfg: ModelConfig, batch: dict,
+              calib: Optional[dict] = None) -> float:
+    """Deterministic eval loss of ``params`` on one batch — the number the
+    train→serve export round-trip is asserted against (launch/export.py).
+    ``calib`` freezes activation quantizers to the EMA ranges, matching
+    what the export bakes into the serving artifact. Works on training
+    params (fake-quant forward) and on serving artifacts ("w_q" trees)
+    alike, since both route through ``layers.apply_linear``.
+    """
+    @jax.jit
+    def f(params, batch, calib):
+        return MD.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                          enc_inputs=batch.get("enc_inputs"),
+                          image_embeds=batch.get("image_embeds"),
+                          remat=False, calib=calib)
+
+    return float(f(params, batch, calib))
 
 
 def prefill_step(params, cfg: ModelConfig, tokens, *, enc_inputs=None,

@@ -68,14 +68,11 @@ def _project_qkv(x: Array, kv_src: Array, p: dict, cfg: ModelConfig):
     hd = cfg.resolved_head_dim
     b, t, _ = x.shape
     s = kv_src.shape[1]
-    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq"),
-                       backend=cfg.kernel_backend) \
+    q = L.project(x, p["wq"], cfg, "attn.wq") \
         .reshape(b, t, cfg.num_heads, hd)
-    k = L.apply_linear(kv_src, p["wk"], L.module_quant(cfg, "attn.wk"),
-                       backend=cfg.kernel_backend) \
+    k = L.project(kv_src, p["wk"], cfg, "attn.wk") \
         .reshape(b, s, cfg.num_kv_heads, hd)
-    v = L.apply_linear(kv_src, p["wv"], L.module_quant(cfg, "attn.wv"),
-                       backend=cfg.kernel_backend) \
+    v = L.project(kv_src, p["wv"], cfg, "attn.wv") \
         .reshape(b, s, cfg.num_kv_heads, hd)
     return q, k, v
 
@@ -197,8 +194,7 @@ def attend(x: Array, p: dict, cfg: ModelConfig, *,
                              window=window, softcap_val=cfg.attn_softcap,
                              unroll=cfg.unroll_loops)
     out = out.astype(x.dtype).reshape(b, t, -1)
-    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
-                          backend=cfg.kernel_backend)
+    return L.project(out, p["wo"], cfg, "attn.wo")
 
 
 # ---------------------------------------------------------------------------
@@ -265,8 +261,7 @@ def decode_attend(x: Array, cache: KVCache, p: dict, cfg: ModelConfig, *,
                      v.astype(x.dtype), preferred_element_type=jnp.float32)
     out = C.constrain_spec(out.astype(x.dtype).reshape(b, 1, -1),
                            {0: batch_ax})
-    y = L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
-                       backend=cfg.kernel_backend)
+    y = L.project(out, p["wo"], cfg, "attn.wo")
     return y, KVCache(k=k, v=v, length=pos + 1)
 
 
@@ -275,8 +270,7 @@ def cross_attend_cached(x: Array, enc_kv: tuple[Array, Array], p: dict,
     """Cross-attention against precomputed encoder/image K,V (decode path)."""
     b, t, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = L.apply_linear(x, p["wq"], L.module_quant(cfg, "attn.wq"),
-                       backend=cfg.kernel_backend).reshape(
+    q = L.project(x, p["wq"], cfg, "attn.wq").reshape(
         b, t, cfg.num_heads, hd)
     k, v = enc_kv
     g = cfg.num_heads // cfg.num_kv_heads
@@ -287,8 +281,7 @@ def cross_attend_cached(x: Array, enc_kv: tuple[Array, Array], p: dict,
     out = jnp.einsum("btkgs,bskh->btkgh", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     out = out.astype(x.dtype).reshape(b, t, -1)
-    return L.apply_linear(out, p["wo"], L.module_quant(cfg, "attn.wo"),
-                          backend=cfg.kernel_backend)
+    return L.project(out, p["wo"], cfg, "attn.wo")
 
 
 def project_cross_kv(enc: Array, p: dict, cfg: ModelConfig
@@ -296,10 +289,8 @@ def project_cross_kv(enc: Array, p: dict, cfg: ModelConfig
     """Project encoder outputs to (K, V) once; reused every decode step."""
     b, s, _ = enc.shape
     hd = cfg.resolved_head_dim
-    k = L.apply_linear(enc, p["wk"], L.module_quant(cfg, "attn.wk"),
-                       backend=cfg.kernel_backend).reshape(
+    k = L.project(enc, p["wk"], cfg, "attn.wk").reshape(
         b, s, cfg.num_kv_heads, hd)
-    v = L.apply_linear(enc, p["wv"], L.module_quant(cfg, "attn.wv"),
-                       backend=cfg.kernel_backend).reshape(
+    v = L.project(enc, p["wv"], cfg, "attn.wv").reshape(
         b, s, cfg.num_kv_heads, hd)
     return k, v

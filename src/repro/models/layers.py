@@ -11,6 +11,7 @@ Sec.-4 accumulator saving is preserved. See DESIGN.md §4.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import jax
@@ -88,6 +89,108 @@ def affine_fake_quant_n(x: Array, n: Array) -> Array:
     return (s * (q - z)).astype(x.dtype)
 
 
+def affine_fake_quant_ranged(x: Array, bits: int, rng: Array) -> Array:
+    """``affine_fake_quant`` against a calibrated [lo, hi] range (STE).
+
+    ``rng`` is a (2,)-shaped [lo, hi] entry from the EMA calibration
+    collection (``core.calibrate``); the unseen sentinel (lo > hi) falls
+    back to the dynamic per-tensor range, bit-exact with
+    ``affine_fake_quant``."""
+    xf = x.astype(jnp.float32)
+    q, s, z = quant.affine_from_range(xf, float((1 << bits) - 1),
+                                      rng[0], rng[1])
+    xq = s * (q - z)
+    return xf + jax.lax.stop_gradient(xq - xf)
+
+
+# ---------------------------------------------------------------------------
+# Activation-range calibration tap (QAT observers; core/calibrate.py)
+# ---------------------------------------------------------------------------
+
+class CalibTap:
+    """Trace-scoped activation observer.
+
+    While installed (``calib_tap``), every ``qlinear`` call that knows its
+    module path (a) records the per-tensor min/max of its input under that
+    path into ``observed``, and (b) quantizes activations against the
+    calibrated EMA range in ``ranges`` (falling back to the dynamic range
+    while a role is unseen).  The tap is installed *inside* each scan body
+    (``models.model``) so the observed tracers stay inside their scan scope
+    and are merged out through the carry — never leaked across traces.
+    """
+
+    __slots__ = ("ranges", "observed")
+
+    def __init__(self, ranges):
+        self.ranges = ranges or {}
+        self.observed: dict[str, Array] = {}
+
+    def observe(self, path: str, x: Array) -> None:
+        xf = x.astype(jnp.float32)
+        rec = jnp.stack([jnp.min(xf), jnp.max(xf)])
+        prev = self.observed.get(path)
+        if prev is not None:
+            rec = jnp.stack([jnp.minimum(prev[0], rec[0]),
+                             jnp.maximum(prev[1], rec[1])])
+        self.observed[path] = rec
+
+    def range_for(self, path: str) -> Optional[Array]:
+        rng = self.ranges.get(path)
+        if rng is None:
+            return None
+        return jax.lax.stop_gradient(rng)
+
+
+_TAPS: list[CalibTap] = []
+
+
+@contextlib.contextmanager
+def calib_tap(ranges):
+    """Install an activation observer for the enclosed trace scope."""
+    tap = CalibTap(ranges)
+    _TAPS.append(tap)
+    try:
+        yield tap
+    finally:
+        _TAPS.pop()
+
+
+@contextlib.contextmanager
+def calib_suspend():
+    """Mask the active tap for a nested trace scope.
+
+    Projections that run inside an INNER ``lax.scan`` (the MoE expert loop)
+    must not observe into the outer tap: their min/max tracers belong to
+    the inner trace and leak (UnexpectedTracerError) when the outer scope
+    merges them. Suspended projections keep dynamic per-tensor ranges; the
+    roles stay *unseen* in the collection, so export leaves them dynamic
+    too — the train→serve agreement is preserved, just without frozen
+    ranges for those roles."""
+    _TAPS.append(None)
+    try:
+        yield
+    finally:
+        _TAPS.pop()
+
+
+def _active_tap() -> Optional[CalibTap]:
+    return _TAPS[-1] if _TAPS else None
+
+
+def _act_fake_quant(x: Array, bits: int, path: Optional[str]) -> Array:
+    """The activation side of ``qlinear``: dynamic per-tensor fake-quant,
+    upgraded to observed + EMA-calibrated quantization when a tap is
+    installed and the call site identified itself with a module path."""
+    xf = x.astype(jnp.float32)
+    tap = _active_tap()
+    if tap is not None and path is not None:
+        tap.observe(path, xf)
+        rng = tap.range_for(path)
+        if rng is not None:
+            return affine_fake_quant_ranged(xf, bits, rng)
+    return affine_fake_quant(xf, bits)
+
+
 # ---------------------------------------------------------------------------
 # QuantLinear
 # ---------------------------------------------------------------------------
@@ -107,10 +210,15 @@ def module_quant(cfg, path: str):
     return cfg.policy.lookup(path)
 
 
-def qlinear(x: Array, w: Array, b: Optional[Array], qc) -> Array:
+def qlinear(x: Array, w: Array, b: Optional[Array], qc,
+            path: Optional[str] = None) -> Array:
     """y = quant(x) @ quant(w) + b under the configured scheme.
     ``qc`` is a ``QuantConfig`` or a per-module ``core.policy.ModuleQuant``
-    (attribute-compatible).
+    (attribute-compatible).  ``path`` is the module's canonical policy path
+    ("attn.wq", ...): when given and a calibration tap is installed
+    (``calib_tap``), the activation range is observed and the EMA-calibrated
+    range drives the quantizer — without a tap the path is inert and the
+    numerics are bit-exact with the pre-calibration behavior.
 
     Shapes: x (..., d_in), w (d_in, d_out). All schemes are implemented as
     (differentiable) fake-quant so the same code path serves PTQ evaluation
@@ -127,20 +235,32 @@ def qlinear(x: Array, w: Array, b: Optional[Array], qc) -> Array:
     elif mode in ("ruq", "ruq_unsigned"):
         wq = quant.fake_quant(w.astype(jnp.float32), qc.weight_bits,
                               signed=True, axis=0).astype(dtype)
-        xq = affine_fake_quant(x.astype(jnp.float32),
-                               qc.act_bits).astype(dtype)
+        xq = _act_fake_quant(x, qc.act_bits, path).astype(dtype)
         y = xq @ wq
     elif mode == "pann":
-        wq = pann_core.pann_fake_quant(w.astype(jnp.float32), qc.r,
-                                       axis=0).astype(dtype)
-        xq = affine_fake_quant(x.astype(jnp.float32),
-                               qc.act_bits_tilde).astype(dtype)
-        y = xq @ wq
+        # the STE branch lives in core.pann so PANN's training semantics sit
+        # beside its deployment semantics; per-module (b~x, R) comes from qc
+        tap = _active_tap()
+        rng = None
+        if tap is not None and path is not None:
+            tap.observe(path, x)
+            rng = tap.range_for(path)
+        y = pann_core.pann_qat_matmul(x, w, qc, act_range=rng)
     else:
         raise ValueError(f"unknown quant mode {mode!r}")
     if b is not None:
         y = y + b
     return y
+
+
+def project(x: Array, p: dict, cfg, path: str) -> Array:
+    """The one-call projection idiom: resolve the module's policy
+    (``module_quant``), route through ``apply_linear`` with the configured
+    kernel backend, and identify the module to the calibration tap. Every
+    model projection goes through here so the per-module (b̃x, R) operating
+    point and its observed activation range always travel together."""
+    return apply_linear(x, p, module_quant(cfg, path),
+                        backend=cfg.kernel_backend, path=path)
 
 
 def init_linear(key, d_in: int, d_out: int, bias: bool = False,
@@ -152,13 +272,15 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
     return p
 
 
-def apply_linear(x: Array, p: dict, qc, backend: Optional[str] = None
-                 ) -> Array:
+def apply_linear(x: Array, p: dict, qc, backend: Optional[str] = None,
+                 path: Optional[str] = None) -> Array:
     """The projection entry point. Training params route through ``qlinear``;
     a serving artifact ("w_q" present) routes through the selected kernel
     backend (``kernels.dispatch``: 'ref' | 'fused' | 'packed' — call sites
     thread ``cfg.kernel_backend``), or through the legacy float dequant
     below when ``backend`` is None (the pre-dispatch behavior, bit-exact).
+    ``path`` identifies the module for activation-range calibration
+    (``calib_tap``); inert unless a tap is installed.
     """
     b = p.get("b")
     b = None if b is None else b.astype(x.dtype)
@@ -168,14 +290,21 @@ def apply_linear(x: Array, p: dict, qc, backend: Optional[str] = None
         # legacy serving path (models/serving.py): PANN int codes +
         # per-channel gamma, dequantized on load — weight-read bytes are the
         # int8 codes. "act_n" (= 2^b~x - 1, a data leaf so rungs share one
-        # compilation) quantizes activations at the operating point's b~x.
+        # compilation) quantizes activations at the operating point's b~x;
+        # "act_lo"/"act_hi" (export-frozen EMA calibration, launch/export.py)
+        # pin the range statically so serving reproduces calibrated QAT.
         w = (p["w_q"].astype(jnp.float32)
              * p["w_scale"]).astype(x.dtype)
-        if "act_n" in p:
+        if "act_lo" in p:
+            xf = x.astype(jnp.float32)
+            q, s, z = quant.affine_from_range(xf, p["act_n"],
+                                              p["act_lo"], p["act_hi"])
+            x = (s * (q - z)).astype(x.dtype)
+        elif "act_n" in p:
             x = affine_fake_quant_n(x, p["act_n"])
         y = x @ w
         return y if b is None else y + b
-    return qlinear(x, p["w"].astype(x.dtype), b, qc)
+    return qlinear(x, p["w"].astype(x.dtype), b, qc, path=path)
 
 
 # ---------------------------------------------------------------------------
@@ -192,4 +321,5 @@ def embed(tokens: Array, p: dict, dtype) -> Array:
 
 def unembed(x: Array, p: dict, qc) -> Array:
     """LM head (weight-activation matmul -> quantized like any projection)."""
-    return qlinear(x, jnp.transpose(p["table"]).astype(x.dtype), None, qc)
+    return qlinear(x, jnp.transpose(p["table"]).astype(x.dtype), None, qc,
+                   path="lm_head")

@@ -37,17 +37,12 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
 def apply_mlp(x: Array, p: dict, cfg: ModelConfig) -> Array:
     if cfg.activation in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
-        h = act(L.apply_linear(x, p["w_gate"],
-                               L.module_quant(cfg, "mlp.w_gate"),
-                               backend=cfg.kernel_backend)) \
-            * L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"),
-                             backend=cfg.kernel_backend)
+        h = act(L.project(x, p["w_gate"], cfg, "mlp.w_gate")) \
+            * L.project(x, p["w_up"], cfg, "mlp.w_up")
     else:
         h = _act(cfg.activation)(
-            L.apply_linear(x, p["w_up"], L.module_quant(cfg, "mlp.w_up"),
-                           backend=cfg.kernel_backend))
-    return L.apply_linear(h, p["w_down"], L.module_quant(cfg, "mlp.w_down"),
-                          backend=cfg.kernel_backend)
+            L.project(x, p["w_up"], cfg, "mlp.w_up"))
+    return L.project(h, p["w_down"], cfg, "mlp.w_down")
 
 
 # ---------------------------------------------------------------------------
@@ -96,8 +91,8 @@ def route(x: Array, p: dict, cfg: ModelConfig
     assert cfg.moe is not None
     e = cfg.moe.num_experts
     logits = L.apply_linear(x, p["router"],
-                            L.module_quant(cfg, "moe.router")
-                            ).astype(jnp.float32)
+                            L.module_quant(cfg, "moe.router"),
+                            path="moe.router").astype(jnp.float32)
     gates, mask = router_topk(logits, cfg.moe.top_k)
     probs_full = jax.nn.softmax(logits, axis=-1)
     f = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))        # fraction routed
@@ -110,19 +105,28 @@ def expert_ffn(x: Array, w_gate: Array, w_up: Array, w_down: Array,
                cfg: ModelConfig) -> Array:
     """One expert's gated FFN. The single definition shared by the dense
     scan below and the capacity-dispatch path (repro.dist.moe_ep), which
-    must stay numerically identical to it."""
+    must stay numerically identical to it.
+
+    Runs under ``calib_suspend``: the expert body executes inside an inner
+    ``lax.scan`` (or shard_map), so observing into the layer-stack tap
+    would leak inner-trace values; expert projections keep dynamic
+    activation ranges (the roles stay unseen → export leaves them dynamic
+    too). The router, which runs in the outer scope, is calibrated."""
     act = jax.nn.silu if cfg.activation in ("swiglu", "geglu") else \
         _act(cfg.activation)
-    h = act(L.qlinear(x, w_gate.astype(x.dtype), None,
-                      L.module_quant(cfg, "moe.w_gate"))) \
-        * L.qlinear(x, w_up.astype(x.dtype), None,
-                    L.module_quant(cfg, "moe.w_up"))
-    # pin TP sharding: propagation dies through the scan-sliced / vmapped
-    # expert weights and GSPMD otherwise computes the FULL d_ff per device
-    # (measured 16x FLOP bloat; EXPERIMENTS.md §Perf iteration 3a)
-    h = C.constrain_axis(h, -1, "model")
-    return L.qlinear(h, w_down.astype(x.dtype), None,
-                     L.module_quant(cfg, "moe.w_down"))
+    with L.calib_suspend():
+        h = act(L.qlinear(x, w_gate.astype(x.dtype), None,
+                          L.module_quant(cfg, "moe.w_gate"),
+                          path="moe.w_gate")) \
+            * L.qlinear(x, w_up.astype(x.dtype), None,
+                        L.module_quant(cfg, "moe.w_up"), path="moe.w_up")
+        # pin TP sharding: propagation dies through the scan-sliced /
+        # vmapped expert weights and GSPMD otherwise computes the FULL d_ff
+        # per device (measured 16x FLOP bloat; EXPERIMENTS.md §Perf 3a)
+        h = C.constrain_axis(h, -1, "model")
+        return L.qlinear(h, w_down.astype(x.dtype), None,
+                         L.module_quant(cfg, "moe.w_down"),
+                         path="moe.w_down")
 
 
 def apply_moe(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:

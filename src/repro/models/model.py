@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import calibrate as CAL
 from repro.dist import constrain as C
 from repro.models import attention as A
 from repro.models import layers as L
@@ -74,85 +75,140 @@ def init_params(key, cfg: ModelConfig) -> dict:
 def _run_stack(x: Array, stack: dict, cfg: ModelConfig, *, causal: bool,
                shared: Optional[dict] = None,
                cross_src: Optional[Array] = None,
-               remat: bool = True, role: str = "decoder"
-               ) -> tuple[Array, Array]:
+               remat: bool = True, role: str = "decoder",
+               calib: Optional[dict] = None
+               ) -> tuple[Array, Array, Optional[dict]]:
+    """Run one scanned layer stack. ``calib`` (a ``core.calibrate``
+    collection) turns on activation-range observation: a tap is installed
+    *inside* each scan body so observed statistics ride the scan carry, and
+    the EMA ranges feed the quantizers. Returns (x, aux_loss, observed) —
+    observed is None when calibration is off (the bit-exact legacy path).
+    """
     pattern = T.group_pattern(cfg, role)
+    collect = bool(calib)
 
-    def group_body(carry, gp):
-        h, aux = carry
+    def run_layers(h, aux, gp):
         for i, spec in enumerate(pattern):
             h, a = T.apply_layer(h, gp["layers"][i], cfg, spec,
                                  shared=shared, cross_src=cross_src,
                                  causal=causal)
             aux = aux + a
-        return (h, aux), None
+        return h, aux
+
+    def group_body(carry, gp):
+        if not collect:
+            h, aux = carry
+            h, aux = run_layers(h, aux, gp)
+            return (h, aux), None
+        h, aux, obs = carry
+        with L.calib_tap(calib) as tap:
+            h, aux = run_layers(h, aux, gp)
+        return (h, aux, CAL.merge(obs, tap.observed)), None
 
     body = jax.checkpoint(group_body) if remat else group_body
     n_groups = jax.tree_util.tree_leaves(stack["groups"])[0].shape[0]
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                               stack["groups"],
-                               unroll=n_groups if cfg.unroll_loops else 1)
-    for i, lp in enumerate(stack.get("tail", [])):
-        x, a = T.apply_layer(x, lp, cfg, pattern[i % len(pattern)],
-                             shared=shared, cross_src=cross_src,
-                             causal=causal)
-        aux = aux + a
-    return x, aux
+    aux0 = jnp.zeros((), jnp.float32)
+    init = (x, aux0, CAL.unseen_like(calib)) if collect else (x, aux0)
+    carry, _ = jax.lax.scan(body, init, stack["groups"],
+                            unroll=n_groups if cfg.unroll_loops else 1)
+    if collect:
+        x, aux, obs = carry
+    else:
+        (x, aux), obs = carry, None
+
+    def run_tail(h, aux):
+        for i, lp in enumerate(stack.get("tail", [])):
+            h, a = T.apply_layer(h, lp, cfg, pattern[i % len(pattern)],
+                                 shared=shared, cross_src=cross_src,
+                                 causal=causal)
+            aux = aux + a
+        return h, aux
+
+    if collect and stack.get("tail"):
+        with L.calib_tap(calib) as tap:
+            x, aux = run_tail(x, aux)
+        obs = CAL.merge(obs, tap.observed)
+    else:
+        x, aux = run_tail(x, aux)
+    return x, aux, obs
 
 
 class ForwardOut(NamedTuple):
     logits: Array
     aux_loss: Array
+    # observed activation ranges ({path: [lo, hi]}, core/calibrate.py) when
+    # the caller passed a calibration collection; None otherwise
+    calib: Optional[dict] = None
 
 
 def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
             enc_inputs: Optional[Array] = None,
             image_embeds: Optional[Array] = None,
-            remat: bool = True) -> ForwardOut:
+            remat: bool = True, calib: Optional[dict] = None) -> ForwardOut:
     """tokens: (B, T) int32. enc_inputs: (B, S_enc, d) stubbed frontend
     embeddings (encdec). image_embeds: (B, n_img, d) stubbed patch embeddings
-    (vlm)."""
+    (vlm). ``calib``: EMA activation-range collection (``core.calibrate``) —
+    quantizers use its frozen ranges and the ForwardOut reports this pass's
+    observed ranges for the EMA update (power-aware QAT, DESIGN.md §9)."""
     dtype = _dtype(cfg)
+    collect = bool(calib)
     x = C.constrain_batch(L.embed(tokens, params["embed"], dtype))
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
 
+    obs = CAL.unseen_like(calib) if collect else None
     cross_src = None
     if cfg.family == "encdec":
         assert enc_inputs is not None
-        enc, _ = _run_stack(enc_inputs.astype(dtype), params["encoder"], cfg,
-                            causal=False, remat=remat, role="encoder")
+        enc, _, enc_obs = _run_stack(enc_inputs.astype(dtype),
+                                     params["encoder"], cfg, causal=False,
+                                     remat=remat, role="encoder", calib=calib)
         cross_src = L.apply_norm(enc, params["enc_norm"], cfg.norm)
+        if collect:
+            obs = CAL.merge(obs, enc_obs)
     elif cfg.family == "vlm":
         assert image_embeds is not None
         cross_src = image_embeds.astype(dtype)
 
-    x, aux = _run_stack(x, params["decoder"], cfg, causal=True,
-                        shared=params.get("shared_attn"),
-                        cross_src=cross_src, remat=remat)
+    x, aux, dec_obs = _run_stack(x, params["decoder"], cfg, causal=True,
+                                 shared=params.get("shared_attn"),
+                                 cross_src=cross_src, remat=remat,
+                                 calib=calib)
+    if collect:
+        obs = CAL.merge(obs, dec_obs)
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
-    if cfg.tie_embeddings:
-        logits = L.unembed(x, params["embed"],
-                           L.module_quant(cfg, "lm_head"))
+
+    def head(h):
+        if cfg.tie_embeddings:
+            return L.unembed(h, params["embed"],
+                             L.module_quant(cfg, "lm_head"))
+        return L.project(h, params["lm_head"], cfg, "lm_head")
+
+    if collect:
+        with L.calib_tap(calib) as tap:
+            logits = head(x)
+        obs = CAL.merge(obs, tap.observed)
     else:
-        logits = L.apply_linear(x, params["lm_head"],
-                                L.module_quant(cfg, "lm_head"),
-                                backend=cfg.kernel_backend)
+        logits = head(x)
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
-    return ForwardOut(logits=logits, aux_loss=aux)
+    return ForwardOut(logits=logits, aux_loss=aux, calib=obs)
 
 
 def lm_loss(params: dict, cfg: ModelConfig, tokens: Array, labels: Array,
             *, enc_inputs=None, image_embeds=None, remat: bool = True,
-            aux_weight: float = 0.01) -> Array:
+            aux_weight: float = 0.01, calib: Optional[dict] = None,
+            return_calib: bool = False):
     out = forward(params, cfg, tokens, enc_inputs=enc_inputs,
-                  image_embeds=image_embeds, remat=remat)
+                  image_embeds=image_embeds, remat=remat, calib=calib)
     logits = out.logits
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     mask = (labels >= 0).astype(jnp.float32)
     loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return loss + aux_weight * out.aux_loss
+    loss = loss + aux_weight * out.aux_loss
+    if return_calib:
+        return loss, out.calib
+    return loss
 
 
 # ---------------------------------------------------------------------------
@@ -184,9 +240,9 @@ def init_decode_state(params: dict, cfg: ModelConfig, batch: int,
     if cfg.family in ("encdec", "vlm"):
         if cfg.family == "encdec":
             assert enc_inputs is not None
-            enc, _ = _run_stack(enc_inputs.astype(dtype), params["encoder"],
-                                cfg, causal=False, remat=False,
-                                role="encoder")
+            enc, _, _ = _run_stack(enc_inputs.astype(dtype),
+                                   params["encoder"], cfg, causal=False,
+                                   remat=False, role="encoder")
             src = L.apply_norm(enc, params["enc_norm"], cfg.norm)
         else:
             assert image_embeds is not None
@@ -254,9 +310,7 @@ def decode_step(params: dict, cfg: ModelConfig, state: DecodeState,
         logits = L.unembed(x, params["embed"],
                            L.module_quant(cfg, "lm_head"))
     else:
-        logits = L.apply_linear(x, params["lm_head"],
-                                L.module_quant(cfg, "lm_head"),
-                                backend=cfg.kernel_backend)
+        logits = L.project(x, params["lm_head"], cfg, "lm_head")
     logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
     return logits, DecodeState(caches=new_caches, cross_kv=state.cross_kv,
                                position=state.position + 1)

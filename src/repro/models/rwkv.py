@@ -101,7 +101,8 @@ def apply_time_mix(x: Array, p: dict, cfg: ModelConfig,
         return L.module_quant(cfg, f"rwkv.tm.{name}")
 
     def lin(xv, w, name):
-        return L.apply_linear(xv, w, qc(name), backend=cfg.kernel_backend)
+        return L.apply_linear(xv, w, qc(name), backend=cfg.kernel_backend,
+                              path=f"rwkv.tm.{name}")
 
     prev = jnp.zeros((b, d), x.dtype) if state is None else \
         state.shift_tm.astype(x.dtype)
@@ -137,11 +138,8 @@ def apply_channel_mix(x: Array, p: dict, cfg: ModelConfig,
     mu = p["mu"].astype(x.dtype)
     xk = x * mu[0] + xs * (1 - mu[0])
     k = jnp.square(jax.nn.relu(
-        L.apply_linear(xk, p["wk"], L.module_quant(cfg, "rwkv.cm.wk"),
-                       backend=cfg.kernel_backend)))
-    return L.apply_linear(k, p["wv"],
-                          L.module_quant(cfg, "rwkv.cm.wv"),
-                          backend=cfg.kernel_backend), x[:, -1, :]
+        L.project(xk, p["wk"], cfg, "rwkv.cm.wk")))
+    return L.project(k, p["wv"], cfg, "rwkv.cm.wv"), x[:, -1, :]
 
 
 def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:

@@ -19,6 +19,7 @@ from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import pann as pann_core
@@ -64,7 +65,9 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 policy: Optional[pol.PolicyTree] = None,
                                 store_dtype=jnp.int8,
                                 pack_planes: bool = False,
-                                plane_count: Optional[int] = None) -> Any:
+                                plane_count: Optional[int] = None,
+                                calib: Optional[Mapping[str, Any]] = None
+                                ) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
     embedding gather table stay in floating point (documented).
@@ -92,9 +95,24 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     ``LADDER_PLANE_COUNT`` so every rung shares plane-leaf avals. Codes are
     clipped to the planes' +-(2^P - 1) envelope (a no-op at P = 7, the int8
     range) so ``w_q`` and the planes always describe the SAME weights —
-    the backends' bit-exactness contract."""
+    the backends' bit-exactness contract.
+
+    ``calib`` (an EMA activation-range collection from power-aware QAT,
+    ``core.calibrate`` / ``launch/export.py``) freezes each projection's
+    activation range into ``act_lo``/``act_hi`` leaves: the forward then
+    quantizes against the SAME static ranges training converged on instead
+    of the per-batch dynamic range — the train→serve closing move. Roles
+    the training run never observed (lo > hi) stay dynamic. Requires an
+    activation bit width (``act_bits`` or a ``policy``) so ``act_n`` is
+    materialized alongside."""
     if policy is None:
         r = r if r is not None else cfg.quant.r
+    if calib:
+        if act_bits is None and policy is None:
+            raise ValueError(
+                "freezing calibrated ranges needs an activation bit width: "
+                "pass act_bits= or a policy= tree")
+        calib = {k: np.asarray(v, np.float32) for k, v in calib.items()}
 
     def walk(node, trail=()):
         if isinstance(node, dict):
@@ -132,6 +150,15 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                     out["act_n"] = jnp.full(w.shape[:-2],
                                             float((1 << int(ab)) - 1),
                                             jnp.float32)
+                    if calib:
+                        rng = calib.get(pol.serving_path(trail))
+                        if rng is not None and float(rng[0]) <= float(rng[1]):
+                            out["act_lo"] = jnp.full(w.shape[:-2],
+                                                     float(rng[0]),
+                                                     jnp.float32)
+                            out["act_hi"] = jnp.full(w.shape[:-2],
+                                                     float(rng[1]),
+                                                     jnp.float32)
                 if "b" in node:
                     out["b"] = node["b"]
                 return out
@@ -165,7 +192,8 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
                         mesh=None, par: Optional[ParallelConfig] = None,
                         store_dtype=jnp.int8,
                         pack_planes: bool = False,
-                        plane_count: Optional[int] = None) -> dict:
+                        plane_count: Optional[int] = None,
+                        calib: Optional[Mapping[str, Any]] = None) -> dict:
     """Materialize one int8 weight-code variant per operating point.
 
     ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
@@ -182,6 +210,12 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     backend; callers must pin ``plane_count`` (e.g. ``LADDER_PLANE_COUNT``)
     so every rung's plane leaves share avals — a value-exact per-rung count
     would retrace the decode step at every rung switch.
+
+    ``calib`` freezes EMA-calibrated activation ranges into every rung (see
+    ``quantize_params_for_serving``); since the range leaves are values,
+    not avals, calibrated and uncalibrated rungs still share one compiled
+    decode step — but every rung in ONE cache must agree on which roles are
+    calibrated (same leaf set), which passing one collection guarantees.
     """
     if pack_planes and plane_count is None and len(r_by_rung) > 1:
         raise ValueError(
@@ -193,7 +227,7 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     shardings = None
     for key, spec in r_by_rung.items():
         kw = dict(store_dtype=store_dtype, pack_planes=pack_planes,
-                  plane_count=plane_count)
+                  plane_count=plane_count, calib=calib)
         if isinstance(spec, pol.PolicyTree):
             v = quantize_params_for_serving(params, cfg, policy=spec, **kw)
         else:

@@ -145,9 +145,7 @@ def _ssd_chunked(x: Array, dt: Array, a_log: Array, b_ssm: Array,
 def apply_ssm(x: Array, p: dict, cfg: ModelConfig) -> Array:
     """Training/prefill forward. x: (B, T, d) -> (B, T, d)."""
     d_inner, h, p_dim, n = _dims(cfg)
-    zxbcdt = L.apply_linear(x, p["in_proj"],
-                            L.module_quant(cfg, "ssm.in_proj"),
-                            backend=cfg.kernel_backend)
+    zxbcdt = L.project(x, p["in_proj"], cfg, "ssm.in_proj")
     z, xs, b_ssm, c_ssm, dt = _split_proj(zxbcdt, cfg)
     conv_in = jnp.concatenate([xs, b_ssm, c_ssm], axis=-1)
     conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
@@ -158,9 +156,7 @@ def apply_ssm(x: Array, p: dict, cfg: ModelConfig) -> Array:
     y = y.reshape(*x.shape[:-1], d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = L.apply_norm(y, p["norm"], "rmsnorm")
-    return L.apply_linear(y, p["out_proj"],
-                          L.module_quant(cfg, "ssm.out_proj"),
-                          backend=cfg.kernel_backend)
+    return L.project(y, p["out_proj"], cfg, "ssm.out_proj")
 
 
 def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
@@ -176,9 +172,7 @@ def decode_ssm(x: Array, st: SSMState, p: dict, cfg: ModelConfig
                ) -> tuple[Array, SSMState]:
     """Single-token recurrent step. x: (B, 1, d)."""
     d_inner, h, p_dim, n = _dims(cfg)
-    zxbcdt = L.apply_linear(x, p["in_proj"],
-                            L.module_quant(cfg, "ssm.in_proj"),
-                            backend=cfg.kernel_backend)
+    zxbcdt = L.project(x, p["in_proj"], cfg, "ssm.in_proj")
     z, xs, b_ssm, c_ssm, dt = _split_proj(zxbcdt, cfg)
     conv_in = jnp.concatenate([xs, b_ssm, c_ssm], axis=-1)   # (B, 1, C)
     conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
@@ -199,7 +193,5 @@ def decode_ssm(x: Array, st: SSMState, p: dict, cfg: ModelConfig
     y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = L.apply_norm(y, p["norm"], "rmsnorm")
-    out = L.apply_linear(y, p["out_proj"],
-                         L.module_quant(cfg, "ssm.out_proj"),
-                         backend=cfg.kernel_backend)
+    out = L.project(y, p["out_proj"], cfg, "ssm.out_proj")
     return out, SSMState(state=state, conv=new_tail, length=st.length + 1)

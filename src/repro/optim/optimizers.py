@@ -26,14 +26,26 @@ class SGDState(NamedTuple):
 
 
 def cosine_warmup_schedule(cfg: TrainConfig) -> Callable[[Array], Array]:
+    """Cosine decay with linear warmup, plus optional LR *re*-warmup ramps
+    after budget-annealing knots (``cfg.lr_rewarmup_knots`` /
+    ``cfg.anneal_warmup_steps``): tightening the quantization budget changes
+    the loss surface, and a brief ramp lets the Adam moments re-adapt
+    instead of taking the first post-knot steps at full speed. Off by
+    default (empty knots / 0 ramp) — bit-identical to the plain schedule."""
     def lr(step):
         step = step.astype(jnp.float32)
         warm = cfg.lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
         prog = jnp.clip((step - cfg.warmup_steps)
                         / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
         cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
-        return jnp.where(step < cfg.warmup_steps, warm,
-                         cfg.lr * (0.1 + 0.9 * cos))
+        out = jnp.where(step < cfg.warmup_steps, warm,
+                        cfg.lr * (0.1 + 0.9 * cos))
+        if cfg.anneal_warmup_steps > 0:
+            for knot in cfg.lr_rewarmup_knots:
+                ramp = jnp.clip((step - knot) / cfg.anneal_warmup_steps,
+                                0.0, 1.0)
+                out = out * jnp.where(step >= knot, ramp, 1.0)
+        return out
     return lr
 
 

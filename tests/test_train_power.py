@@ -1,0 +1,339 @@
+"""Power-aware training: budget annealing, EMA calibration, checkpoint
+round-trip of quant/calibration state, and the train→serve export loop.
+
+The heavyweight piece is a module-scoped fixture that runs a real (tiny)
+``launch/train.py`` invocation across two budget knots; the tests then
+assert the properties the ISSUE demands:
+
+  * resuming a mid-anneal checkpoint continues the loss trajectory
+    BIT-exactly and replans the allocator identically,
+  * the exported serving artifact reproduces the training-time eval loss,
+  * calibration state is checkpointed and EMA-updated deterministically.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.core import anneal
+from repro.core import calibrate as CAL
+from repro.launch import export as EX
+from repro.launch import train as TR
+
+ARCH = "llama3-8b"
+SCHEDULE = "0:fp,2:8,5:6"
+STEPS = 8
+BASE_ARGS = ["--arch", ARCH, "--reduced", "--batch", "2", "--seq", "16",
+             "--quant", "pann", "--train_quant", "qat",
+             "--budget_schedule", SCHEDULE, "--allocation", "layerwise",
+             "--lr", "1e-2", "--log_every", "100"]
+
+
+def _train(ckpt_dir, steps, extra=()):
+    return TR.main(BASE_ARGS + ["--ckpt_dir", str(ckpt_dir),
+                                "--steps", str(steps),
+                                "--total_steps", str(STEPS),
+                                "--ckpt_every", "4", *extra])
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    ckpt_dir = tmp_path_factory.mktemp("ck_full")
+    summary = _train(ckpt_dir, STEPS)
+    return str(ckpt_dir), summary
+
+
+# ---------------------------------------------------------------------------
+# Budget schedule / annealer
+# ---------------------------------------------------------------------------
+
+def test_schedule_parse_and_segments():
+    s = anneal.BudgetSchedule.parse("0:fp,4:8,12:6")
+    assert s.bits_at(0) == 0 and s.bits_at(3) == 0
+    assert s.bits_at(4) == 8 and s.bits_at(11) == 8
+    assert s.bits_at(12) == 6 and s.bits_at(999) == 6
+    assert s.segments(0, 18) == ((0, 4, 0), (4, 12, 8), (12, 18, 6))
+    # resume mid-segment: same budgets, clipped spans
+    assert s.segments(6, 18) == ((6, 12, 8), (12, 18, 6))
+    assert s.segments(5, 5) == ()
+    assert s.knot_steps() == (4, 12)
+
+
+@pytest.mark.parametrize("bad", ["", "4", "4:8,2:6", "x:8", "3:-1", "3:8.5"])
+def test_schedule_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        anneal.BudgetSchedule.parse(bad)
+
+
+def test_annealer_replan_is_deterministic():
+    cfg = configs.reduced(configs.get_config(ARCH))
+    mk = lambda: anneal.BudgetAnnealer(
+        anneal.BudgetSchedule.parse(SCHEDULE), cfg, allocation="layerwise")
+    a, b = mk(), mk()
+    for bits in (8, 6):
+        ta, tb = a.tree_for(bits), b.tree_for(bits)
+        assert ta == tb                       # frozen dataclass equality
+        assert a.gbitflips_per_token(bits) == b.gbitflips_per_token(bits)
+    # fp segment strips quantization from the forward
+    cfg_fp, plan, bits = a.config_at(cfg, 0)
+    assert bits == 0 and plan is None
+    assert cfg_fp.policy is None and cfg_fp.quant.mode == "none"
+    cfg_q, plan, bits = a.config_at(cfg, 7)
+    assert bits == 6 and cfg_q.policy is plan.tree
+
+
+# ---------------------------------------------------------------------------
+# Tri-state --train_quant validation
+# ---------------------------------------------------------------------------
+
+def _args(**kw):
+    ns = dict(quant="none", train_quant="", budget_schedule="")
+    ns.update(kw)
+    import types
+    return types.SimpleNamespace(**ns)
+
+
+def test_train_quant_tri_state():
+    assert TR.resolve_train_quant(_args()) == "none"
+    assert TR.resolve_train_quant(_args(quant="pann")) == "qat"   # legacy
+    assert TR.resolve_train_quant(_args(quant="pann",
+                                        train_quant="ptq")) == "ptq"
+    with pytest.raises(ValueError):   # qat needs a scheme
+        TR.resolve_train_quant(_args(train_quant="qat"))
+    with pytest.raises(ValueError):   # scheme + none is ambiguous
+        TR.resolve_train_quant(_args(quant="pann", train_quant="none"))
+    with pytest.raises(ValueError):   # schedule needs qat
+        TR.resolve_train_quant(_args(quant="pann", train_quant="ptq",
+                                     budget_schedule="0:8"))
+    with pytest.raises(ValueError):   # schedule plans PANN points
+        TR.resolve_train_quant(_args(quant="ruq", train_quant="qat",
+                                     budget_schedule="0:8"))
+
+
+# ---------------------------------------------------------------------------
+# EMA calibration collection
+# ---------------------------------------------------------------------------
+
+def test_calib_ema_semantics():
+    cfg = configs.reduced(configs.get_config(ARCH))
+    calib = CAL.init_calib(cfg)
+    assert "attn.wq" in calib and "lm_head" in calib
+    assert "ssm.conv" not in calib
+    assert not bool(CAL.seen(calib["attn.wq"]))
+
+    obs = CAL.unseen_like(calib)
+    obs["attn.wq"] = jnp.asarray([-1.0, 2.0], jnp.float32)
+    # first observation is adopted outright
+    c1 = CAL.ema_update(calib, obs, decay=0.9)
+    np.testing.assert_allclose(np.asarray(c1["attn.wq"]), [-1.0, 2.0])
+    # unseen observation leaves the range untouched
+    np.testing.assert_array_equal(np.asarray(c1["mlp.w_up"]),
+                                  np.asarray(calib["mlp.w_up"]))
+    # subsequent observations blend with the decay
+    obs2 = dict(obs, **{"attn.wq": jnp.asarray([-3.0, 1.0], jnp.float32)})
+    c2 = CAL.ema_update(c1, obs2, decay=0.9)
+    np.testing.assert_allclose(np.asarray(c2["attn.wq"]),
+                               [0.9 * -1.0 + 0.1 * -3.0,
+                                0.9 * 2.0 + 0.1 * 1.0], rtol=1e-6)
+    # merge takes the envelope
+    merged = CAL.merge(obs, {"attn.wq": jnp.asarray([-0.5, 3.0])})
+    np.testing.assert_allclose(np.asarray(merged["attn.wq"]), [-1.0, 3.0])
+
+
+def test_serving_freezes_calibrated_ranges():
+    from repro.launch import steps as ST
+    from repro.models import serving
+    import jax
+
+    cfg = configs.reduced(configs.get_config(
+        ARCH, quant=QuantConfig(mode="pann", r=2.0, qat=True)))
+    key = jax.random.PRNGKey(0)
+    state = ST.make_train_state(key, cfg, TR.TrainConfig(), calibrate=True)
+    calib = dict(state.calib)
+    calib["attn.wq"] = jnp.asarray([-1.5, 1.5], jnp.float32)  # seen
+    v = serving.quantize_params_for_serving(state.params, cfg, r=2.0,
+                                            act_bits=6, calib=calib)
+    wq_leaf = v["decoder"]["groups"]["layers"][0]["attn"]["wq"]
+    assert "act_lo" in wq_leaf and "act_hi" in wq_leaf
+    assert float(wq_leaf["act_lo"].reshape(-1)[0]) == -1.5
+    # unseen role stays dynamic (no frozen-range leaves)
+    wo_leaf = v["decoder"]["groups"]["layers"][0]["attn"]["wo"]
+    assert "act_lo" not in wo_leaf and "act_n" in wo_leaf
+    with pytest.raises(ValueError):   # range freeze needs a bit width
+        serving.quantize_params_for_serving(state.params, cfg, r=2.0,
+                                            calib=calib)
+
+
+def test_moe_qat_calibration_suspends_expert_scan():
+    """Expert projections run inside an inner lax.scan: observing them into
+    the layer-stack tap would leak inner-trace values. The suspend guard
+    keeps MoE QAT trainable — router calibrated, expert roles dynamic."""
+    import jax
+    from functools import partial
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.launch import steps as ST
+
+    cfg = configs.reduced(configs.get_config(
+        "mixtral-8x7b", quant=QuantConfig(mode="pann", r=2.0, qat=True)))
+    tcfg = TrainConfig(total_steps=4)
+    state = ST.make_train_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                calibrate=True)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    fn = jax.jit(partial(ST.train_step, cfg=cfg, tcfg=tcfg,
+                         par=ParallelConfig(remat="none")))
+    state, metrics = fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    seen = {k for k, v in state.calib.items()
+            if float(v[0]) <= float(v[1])}
+    assert "moe.router" in seen and "attn.wq" in seen
+    assert not seen & {"moe.w_gate", "moe.w_up", "moe.w_down"}
+
+
+def test_frozen_range_convention_is_shared():
+    """A calibrated range that does not span zero is zero-extended the same
+    way by the QAT fake-quant path and the kernel backends — the export
+    gate must validate numerics deployment actually serves."""
+    from repro.core import quant as Q
+    x = jnp.asarray(np.linspace(0.4, 3.1, 64, dtype=np.float32))
+    rng_lo, rng_hi = 0.5, 3.0
+    q, s, z = Q.affine_from_range(x, 63.0, rng_lo, rng_hi)
+    # zero-extension: lo pulled to 0 -> z == 0, scale covers [0, hi]
+    assert float(z) == 0.0
+    np.testing.assert_allclose(float(s), 3.0 / 63.0, rtol=1e-6)
+    # the unseen sentinel still falls back to the UNextended dynamic range
+    qd, sd, zd = Q.affine_from_range(x, 63.0, np.inf, -np.inf)
+    qref, sref, zref = Q.affine_quant_levels(x, 63.0)
+    np.testing.assert_array_equal(np.asarray(qd), np.asarray(qref))
+    assert float(sd) == float(sref) and float(zd) == float(zref)
+
+
+def test_dispatch_backends_honor_frozen_ranges():
+    """The integer serving backends quantize against export-frozen ranges
+    (act_lo/act_hi leaves) — and stay bit-identical to each other."""
+    from repro.kernels import dispatch
+    from repro.models import serving
+
+    rng = np.random.default_rng(0)
+    cfg = configs.reduced(configs.get_config(ARCH))
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    tree = {"wq": {"w": w}}
+    kw = dict(r=2.0, act_bits=6, pack_planes=True)
+    leaf_dyn = serving.quantize_params_for_serving(tree, cfg, **kw)["wq"]
+    leaf_cal = serving.quantize_params_for_serving(
+        tree, cfg, calib={"wq": np.asarray([-8.0, 8.0], np.float32)},
+        **kw)["wq"]
+    y_dyn = np.asarray(dispatch.serving_linear(x, leaf_dyn, "ref"))
+    y_cal = np.asarray(dispatch.serving_linear(x, leaf_cal, "ref"))
+    # a deliberately wide frozen range coarsens the quantizer vs the
+    # batch's own extremes — outputs must differ (the range is honored)
+    assert not np.allclose(y_dyn, y_cal)
+    # cross-backend bit-exactness holds for calibrated artifacts too
+    y_fused = np.asarray(dispatch.serving_linear(x, leaf_cal,
+                                                 "fused:force"))
+    y_packed = np.asarray(dispatch.serving_linear(x, leaf_cal,
+                                                  "packed:force"))
+    np.testing.assert_array_equal(y_cal, y_fused)
+    np.testing.assert_array_equal(y_cal, y_packed)
+
+
+def test_restore_fallback_is_scoped_to_calib(tmp_path):
+    from repro.ckpt import checkpoint as ck
+    old = {"params": {"w": np.ones((2, 2), np.float32)}}
+    ck.save(str(tmp_path), 1, old)
+    tmpl = {"params": {"w": np.zeros((2, 2), np.float32)},
+            "calib": {"attn.wq": np.asarray(CAL.UNSEEN, np.float32)}}
+    out = ck.restore(str(tmp_path), 1, tmpl, strict=("calib/",))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 1.0)
+    assert not bool(CAL.seen(out["calib"]["attn.wq"]))
+    with pytest.raises(KeyError):      # default stays strict
+        ck.restore(str(tmp_path), 1, tmpl)
+    # a missing PARAM leaf never silently falls back under the scoped mode
+    tmpl2 = {"params": {"w": np.zeros((2, 2), np.float32),
+                        "extra": np.zeros((2,), np.float32)}}
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), 1, tmpl2, strict=("calib/",))
+
+
+# ---------------------------------------------------------------------------
+# The end-to-end properties (shared trained run)
+# ---------------------------------------------------------------------------
+
+def test_calibration_state_checkpointed(trained):
+    ckpt_dir, _ = trained
+    arrays = np.load(os.path.join(ckpt_dir, f"step_{STEPS:08d}",
+                                  "arrays.npz"))
+    calib_keys = [k for k in arrays.files if k.startswith("calib/")]
+    assert "calib/attn.wq" in calib_keys
+    lo, hi = arrays["calib/attn.wq"]
+    assert np.isfinite([lo, hi]).all() and lo < hi
+
+
+def test_mid_anneal_resume_bit_exact(trained, tmp_path):
+    full_dir, full = trained
+    ckpt_dir = tmp_path / "ck_resume"
+    first = _train(ckpt_dir, 4)           # stops mid-anneal (8b segment)
+    resumed = _train(ckpt_dir, STEPS)     # restarts from the step-4 ckpt
+    assert first["losses"] == full["losses"][:4]
+    # BIT-exact continuation: same losses, same final eval loss
+    assert resumed["losses"] == full["losses"][4:]
+    assert resumed["eval_loss"] == full["eval_loss"]
+    # the resumed run replanned the allocator identically
+    with open(os.path.join(full_dir, f"step_{STEPS:08d}",
+                           "meta.json")) as f:
+        meta_full = json.load(f)
+    resumed_plans = {p["step"]: p for p in resumed["plans"]}
+    for p in full["plans"]:
+        if p["step"] >= 4 and p["step"] in resumed_plans:
+            assert resumed_plans[p["step"]]["gbitflips_per_token"] == \
+                p["gbitflips_per_token"]
+    assert meta_full["eval_loss"] == resumed["eval_loss"]
+
+
+def test_export_round_trip(trained, tmp_path):
+    ckpt_dir, summary = trained
+    out = str(tmp_path / "artifact")
+    res = EX.main(["--ckpt_dir", ckpt_dir, "--out", out])
+    assert res["bits"] == 6                       # the schedule's last knot
+    assert res["loss_train_eval"] == summary["eval_loss"]
+    assert res["rel_diff"] <= 1e-3                # fp32 round-trip
+    # the artifact landed in checkpoint layout and restores as a tree
+    from repro.ckpt import checkpoint as ck
+    step = ck.latest_step(out)
+    assert step == STEPS
+    meta = ck.read_meta(out, step)
+    assert meta["bits"] == 6 and "train_args" in meta
+
+
+def test_export_rejects_fp_schedule_tail(tmp_path):
+    ckpt_dir = tmp_path / "ck_fp"
+    TR.main(["--arch", ARCH, "--reduced", "--batch", "2", "--seq", "16",
+             "--quant", "pann", "--train_quant", "qat",
+             "--budget_schedule", "0:fp", "--lr", "1e-2",
+             "--log_every", "100", "--ckpt_dir", str(ckpt_dir),
+             "--steps", "2", "--ckpt_every", "2"])
+    with pytest.raises(SystemExit):
+        EX.main(["--ckpt_dir", str(ckpt_dir)])
+
+
+def test_ptq_trains_fp_but_exports_quantized(tmp_path):
+    ckpt_dir = tmp_path / "ck_ptq"
+    summary = TR.main(["--arch", ARCH, "--reduced", "--batch", "2",
+                       "--seq", "16", "--quant", "pann",
+                       "--train_quant", "ptq", "--steps", "3",
+                       "--lr", "1e-2", "--log_every", "100",
+                       "--ckpt_dir", str(ckpt_dir), "--ckpt_every", "3"])
+    # no calibration collection for fp training
+    arrays = np.load(os.path.join(str(ckpt_dir), "step_00000003",
+                                  "arrays.npz"))
+    assert not [k for k in arrays.files if k.startswith("calib/")]
+    res = EX.main(["--ckpt_dir", str(ckpt_dir)])
+    # PTQ pays a quantization gap; it is reported, not gated
+    assert res["train_quant"] == "ptq"
+    assert np.isfinite(res["loss_serve_eval"])
+    assert summary["eval_loss"] == pytest.approx(res["loss_train_eval"])
