@@ -12,6 +12,46 @@ import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+# ---------------------------------------------------------------------------
+# Per-device-kind peak table — the ONE copy of the hardware constants shared
+# by the roofline analysis AND the roofline CI gate (benchmarks/roofline.py).
+# Keys follow jax's device_kind strings. Values per chip:
+#   peak_flops   bf16 MXU peak (FLOP/s)
+#   peak_int8    int8 MXU peak (OP/s) — the serving kernels' compute roof
+#   hbm_bw       HBM bandwidth (byte/s)
+#   ici_bw       ICI bandwidth per link (byte/s)
+# ---------------------------------------------------------------------------
+
+DEVICE_PEAKS = {
+    "TPU v4":  {"peak_flops": 275e12, "peak_int8": 275e12,
+                "hbm_bw": 1228e9, "ici_bw": 50e9},
+    "TPU v5e": {"peak_flops": 197e12, "peak_int8": 394e12,
+                "hbm_bw": 819e9, "ici_bw": 50e9},
+    "TPU v5p": {"peak_flops": 459e12, "peak_int8": 918e12,
+                "hbm_bw": 2765e9, "ici_bw": 100e9},
+    "TPU v6e": {"peak_flops": 918e12, "peak_int8": 1836e12,
+                "hbm_bw": 1640e9, "ici_bw": 100e9},
+    # interpret-mode hosts: placeholder roof so the analysis stays runnable
+    # off-TPU (the CI gate never applies timing thresholds on these)
+    "cpu":     {"peak_flops": 1e12, "peak_int8": 2e12,
+                "hbm_bw": 100e9, "ici_bw": 10e9},
+}
+
+
+def device_peaks(kind: str | None = None) -> dict:
+    """Peaks for ``kind`` (default: the host's first device). Unknown kinds
+    fall back to TPU v5e — the repo's reference part — with a note so the
+    analysis is visibly approximate rather than silently wrong."""
+    if kind is None:
+        try:
+            kind = jax.devices()[0].device_kind
+        except Exception:
+            kind = "cpu"
+    if kind in DEVICE_PEAKS:
+        return {"device_kind": kind, **DEVICE_PEAKS[kind]}
+    base = "cpu" if kind.lower() in ("cpu", "gpu") else "TPU v5e"
+    return {"device_kind": kind, "assumed": base, **DEVICE_PEAKS[base]}
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")

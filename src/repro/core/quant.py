@@ -115,20 +115,64 @@ def affine_quant_levels(x: Array, n, include_zero: bool = False
     |z| ~ |lo|/s far outside int32, and z-derived integer corrections wrap.
     The fp fake-quant paths keep the legacy unextended range.
     """
-    lo = jnp.min(x)
-    hi = jnp.max(x)
+    lo, hi = act_range_bounds(x, include_zero=include_zero)
+    return _affine_from_bounds(x, n, lo, hi)
+
+
+def act_range_bounds(x: Array, lo=None, hi=None, include_zero: bool = True
+                     ) -> Tuple[Array, Array]:
+    """The calibration-range derivation of the affine quantizers, split out
+    so consumers that only need the (s, z) scalars — the Pallas fused-
+    prologue kernels quantize tile-locally in VMEM and must agree with the
+    jnp oracle on the EXACT same bounds — share one copy of it.
+
+    Without ``lo``/``hi``: the tensor's own extremes, optionally zero-
+    extended (``affine_quant_levels`` semantics). With them: the frozen-
+    range semantics of ``affine_from_range``, including the unseen sentinel
+    (lo > hi falls back to dynamic extremes WITHOUT the zero extension).
+    """
+    if lo is None:
+        lo_t = jnp.min(x)
+        hi_t = jnp.max(x)
+        if include_zero:
+            lo_t = jnp.minimum(lo_t, 0.0)
+            hi_t = jnp.maximum(hi_t, 0.0)
+        return lo_t, hi_t
+    lo = jnp.asarray(lo, x.dtype)
+    hi = jnp.asarray(hi, x.dtype)
+    use = lo <= hi
     if include_zero:
         lo = jnp.minimum(lo, 0.0)
         hi = jnp.maximum(hi, 0.0)
-    return _affine_from_bounds(x, n, lo, hi)
+    lo = jnp.where(use, lo, jnp.min(x))
+    hi = jnp.where(use, hi, jnp.max(x))
+    return lo, hi
+
+
+def affine_scale_zp(lo: Array, hi: Array, n) -> Tuple[Array, Array]:
+    """(s, z) of the affine quantizer for calibration bounds [lo, hi] —
+    the scalar half of ``_affine_from_bounds``, exposed so the serving
+    artifact build (``models/serving``) can precompute frozen-range scales
+    once instead of re-deriving them per decode step, with the SAME fp32
+    op sequence the trace-time path uses (the hoist stays bit-exact)."""
+    s = jnp.maximum((hi - lo) / n, 1e-12)
+    z = jnp.round(-lo / s)
+    return s, z
+
+
+def affine_encode(x: Array, s: Array, z: Array, n) -> Array:
+    """Map reals to affine codes ``clip(round(x/s) + z, 0, n)`` for a
+    precomputed (s, z) — float-typed exact integers. This op sequence is
+    replicated VERBATIM inside the fused-prologue Pallas kernels
+    (``kernels/pann_matmul*``): change it there if you change it here, or
+    the cross-backend bit-exactness contract breaks."""
+    return jnp.clip(jnp.round(x / s) + z, 0, n)
 
 
 def _affine_from_bounds(x: Array, n, lo: Array, hi: Array
                         ) -> Tuple[Array, Array, Array]:
-    s = jnp.maximum((hi - lo) / n, 1e-12)
-    z = jnp.round(-lo / s)
-    q = jnp.clip(jnp.round(x / s) + z, 0, n)
-    return q, s, z
+    s, z = affine_scale_zp(lo, hi, n)
+    return affine_encode(x, s, z, n), s, z
 
 
 def affine_from_range(x: Array, n, lo, hi, include_zero: bool = True
@@ -152,14 +196,7 @@ def affine_from_range(x: Array, n, lo, hi, include_zero: bool = True
     with ``affine_quant_levels(x, n)``: calibration warm-up is numerically
     the pre-calibration behavior.
     """
-    lo = jnp.asarray(lo, x.dtype)
-    hi = jnp.asarray(hi, x.dtype)
-    use = lo <= hi
-    if include_zero:
-        lo = jnp.minimum(lo, 0.0)
-        hi = jnp.maximum(hi, 0.0)
-    lo = jnp.where(use, lo, jnp.min(x))
-    hi = jnp.where(use, hi, jnp.max(x))
+    lo, hi = act_range_bounds(x, lo, hi, include_zero=include_zero)
     return _affine_from_bounds(x, n, lo, hi)
 
 

@@ -36,8 +36,11 @@ _COL = {"wq", "wk", "wv", "w_gate", "w_up", "router", "in_proj", "wr",
 # (w_planes_pos/neg: the bit-packed plane artifact for the 'packed' kernel
 # backend — (..., P, K/8, N), sharded by the parent's col/row rule on N/K8)
 _WEIGHT_KEYS = {"w", "w_q", "w_planes_pos", "w_planes_neg"}
-# leaves that are always replicated
-_REPLICATED_KEYS = {"b", "bias", "scale", "w_scale", "act_n", "w_colsum"}
+# leaves that are always replicated (act_*: per-projection activation-
+# quantizer scalars — levels, frozen calibration range, and the hoisted
+# (s, z) the fused-prologue kernels read)
+_REPLICATED_KEYS = {"b", "bias", "scale", "w_scale", "act_n", "act_nlvl",
+                    "act_lo", "act_hi", "act_s", "act_z", "w_colsum"}
 
 
 def _path_names(path) -> list[str]:

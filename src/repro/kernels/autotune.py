@@ -1,0 +1,207 @@
+"""Block-shape autotuner for the Pallas serving matmuls.
+
+The fused-prologue kernels (``pann_matmul_act`` / ``pann_matmul_packed_act``)
+are shape-sensitive in two ways the old one-size heuristic was not: the
+persistent VMEM codes panel costs ``bm * K`` bytes (large-K projections want
+a smaller bm), and the double-buffered plane slots cost ``4 * bk * bn``
+(unpacked) or ``bk * bn / 2`` (packed). This module owns
+
+  * the VMEM cost model + deterministic heuristic (``heuristic_blocks``),
+  * a persistent on-disk cache of measured-best blocks keyed by
+    ``device_kind | backend | MxKxN | planes`` (``blocks_for`` /
+    ``record``), and
+  * the offline measurement loop (``tune``) that fills it.
+
+Determinism contract: ``blocks_for`` is called at TRACE time inside the
+jitted decode step, so it must be a pure function of (shape, cache state) —
+it never measures, never mutates the cache, and therefore cannot retrace a
+warmed engine (``ServeEngine.assert_no_recompile`` holds with the autotuner
+active). ``tune`` runs strictly OFFLINE (``ServeEngine(autotune=True)``
+before ``warmup``); off-TPU it records the heuristic without timing —
+interpret-mode timings are emulator noise, but recording keeps the cache
+read/write path exercised by CPU CI.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro_pann/autotune.json``. The file is versioned and rewritten
+atomically; a corrupt or foreign-version file is ignored, never crashed on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Callable, Iterable, Optional
+
+import jax
+
+CACHE_VERSION = 1
+
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+# process-local snapshot of the on-disk cache; loaded lazily, kept in sync
+# by record(). Maps key -> [bm, bn, bk].
+_cache: Optional[dict] = None
+
+
+def device_kind() -> str:
+    """Autotune cache namespace: the accelerator model ('TPU v5e', ...),
+    'cpu' for interpret-mode hosts."""
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "cpu"
+
+
+def cache_path() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_pann",
+                        "autotune.json")
+
+
+def cache_key(m: int, k: int, n: int, planes: int, backend: str,
+              kind: Optional[str] = None) -> str:
+    return f"{kind or device_kind()}|{backend}|{m}x{k}x{n}|p{planes}"
+
+
+def _load() -> dict:
+    global _cache
+    if _cache is None:
+        _cache = {}
+        try:
+            with open(cache_path()) as f:
+                data = json.load(f)
+            if data.get("version") == CACHE_VERSION:
+                _cache = dict(data.get("blocks", {}))
+        except (OSError, ValueError):
+            pass
+    return _cache
+
+
+def _save() -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"version": CACHE_VERSION, "blocks": _load()}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def clear_memory_cache() -> None:
+    """Drop the process-local snapshot (tests; after external file edits)."""
+    global _cache
+    _cache = None
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, k: int, packed: bool) -> int:
+    """VMEM working set of the fused-prologue kernels for one grid step."""
+    plane_slots = (bk // 8) * bn * 4 if packed else bk * bn * 4
+    return (4 * bm * bk        # fp32 x landing pad
+            + bm * k           # persistent int8 codes panel
+            + plane_slots      # 2 double-buffer slots x 2 signs
+            + 4 * bm * bn      # int32 accumulator
+            + 4 * bm * bn)     # f32 output block
+
+
+def heuristic_blocks(m: int, n: int, k: int, planes: int = 7,
+                     packed: bool = False,
+                     vmem_budget: int = 8 * 2 ** 20) -> tuple[int, int, int]:
+    """Deterministic default: MXU-aligned blocks shrunk until the act-kernel
+    working set fits the VMEM budget (bk first — cheapest to shrink — then
+    bm, whose cost is dominated by the bm*K codes panel)."""
+    bm = min(m, 128)
+    bn = min(n, 128)
+    bk = min(k, 512)
+    if packed:
+        bk = max(8, bk - bk % 8)
+    floor_k = 128 if k >= 128 else bk
+    while bk > floor_k and vmem_bytes(bm, bn, bk, k, packed) > vmem_budget:
+        bk = max(floor_k, bk // 2)
+        if packed:
+            bk = max(8, bk - bk % 8)
+    while bm > 8 and vmem_bytes(bm, bn, bk, k, packed) > vmem_budget:
+        bm //= 2
+    return bm, bn, bk
+
+
+def blocks_for(m: int, k: int, n: int, planes: int, backend: str
+               ) -> tuple[int, int, int]:
+    """Trace-time block lookup: measured-best from the cache when present,
+    the VMEM heuristic otherwise. Pure in (args, cache state)."""
+    hit = _load().get(cache_key(m, k, n, planes, backend))
+    if hit:
+        bm, bn, bk = (int(v) for v in hit)
+        return bm, bn, bk
+    return heuristic_blocks(m, n, k, planes, packed=(backend == "packed"))
+
+
+def record(m: int, k: int, n: int, planes: int, backend: str,
+           blocks: tuple[int, int, int]) -> None:
+    """Persist a tuning decision for ``blocks_for`` to find."""
+    _load()[cache_key(m, k, n, planes, backend)] = list(blocks)
+    _save()
+
+
+def candidate_blocks(m: int, n: int, k: int, planes: int,
+                     packed: bool = False,
+                     vmem_budget: int = 8 * 2 ** 20
+                     ) -> list[tuple[int, int, int]]:
+    """The measurement grid: every MXU-aligned (bm, bn, bk) combination
+    that fits the VMEM model, heuristic included."""
+    bms = sorted({min(m, b) for b in (32, 64, 128)})
+    bns = sorted({min(n, b) for b in (128, 256)})
+    bks = sorted({min(k, b) for b in (128, 256, 512)})
+    if packed:
+        bks = sorted({max(8, b - b % 8) for b in bks})
+    out = {heuristic_blocks(m, n, k, planes, packed, vmem_budget)}
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if vmem_bytes(bm, bn, bk, k, packed) <= vmem_budget:
+                    out.add((bm, bn, bk))
+    return sorted(out)
+
+
+def tune(m: int, k: int, n: int, planes: int, backend: str,
+         runner: Optional[Callable[[tuple[int, int, int]], float]] = None,
+         candidates: Optional[Iterable[tuple[int, int, int]]] = None
+         ) -> tuple[int, int, int]:
+    """Offline: pick the best blocks for one projection shape and persist.
+
+    ``runner(blocks) -> seconds`` measures one candidate (built by
+    ``dispatch.tune_projection``). Off-TPU — or with no runner — the
+    heuristic is recorded without timing: interpret-mode measurements are
+    emulator noise, but the recorded entry still exercises the cache path
+    end-to-end in CPU CI. A cached entry short-circuits (idempotent warmup).
+    """
+    key = cache_key(m, k, n, planes, backend)
+    hit = _load().get(key)
+    if hit:
+        bm, bn, bk = (int(v) for v in hit)
+        return bm, bn, bk
+    packed = backend == "packed"
+    if runner is None or device_kind() == "cpu" or \
+            jax.default_backend() != "tpu":
+        best = heuristic_blocks(m, n, k, planes, packed)
+    else:
+        cands = list(candidates if candidates is not None
+                     else candidate_blocks(m, n, k, planes, packed))
+        timed = []
+        for c in cands:
+            try:
+                timed.append((runner(c), c))
+            except Exception:
+                continue        # a candidate the compiler rejects is skipped
+        best = min(timed)[1] if timed else \
+            heuristic_blocks(m, n, k, planes, packed)
+    record(m, k, n, planes, backend, best)
+    return best

@@ -14,6 +14,19 @@ through ``models.layers.apply_linear``):
               leaves (8 codes/byte along K — 2*P/8 bytes/weight HBM for plane
               count P = the module's b_R), unpacking in VMEM.
 
+The Pallas backends use the FUSED-PROLOGUE kernels (``pann_matmul_act`` /
+``pann_matmul_packed_act``): fp32 activations go straight into the kernel,
+which affine-encodes them tile-locally in VMEM — the int8 code tensor never
+round-trips through HBM (ROADMAP item 3; ``kernel_bench`` accounts the
+eliminated bytes). Only the (s, z) SCALARS are computed outside (a global
+range reduction can't be tile-local), by the one ``core.quant`` derivation
+all backends share; for export-frozen calibration they are precomputed
+artifact leaves (``act_s``/``act_z``, hoisted by ``models/serving``).
+Block shapes come from ``kernels.autotune`` — measured-best per
+(M, K, N, planes) from a persistent per-device cache, VMEM-model heuristic
+otherwise; the lookup is deterministic at trace time so warmed engines
+never retrace.
+
 Every backend realizes the SAME integer dataflow, so their fp32 outputs are
 bit-identical (asserted in tests/test_kernel_dispatch.py, gated in CI by
 ``benchmarks/kernel_bench.py --check``):
@@ -22,6 +35,8 @@ bit-identical (asserted in tests/test_kernel_dispatch.py, gated in CI by
      ``q = clip(round(x/s) + z, 0, n)`` with ``n = min(act_n, 127)`` — the
      zero point z absorbs signed transformer activations (DESIGN.md §4) and
      n is capped at the kernels' half-range int8 code space (App. A.4);
+     the ref backend applies ``quant.affine_encode`` in XLA, the Pallas
+     backends apply the same formula in-kernel on the same sealed (s, z);
   2. ``y_int = q @ w_q - z * colsum(w_q) + round(b / (s*gamma))`` is
      computed exactly in int32 (MXU pass or jnp; the kernels fuse the
      combined zero-point/bias row ``zcol`` into the accumulator) — the
@@ -41,11 +56,14 @@ codes / zero planes (exact no-ops) and the result is sliced back.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.pann import bitplane_decompose
+from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels import pann_matmul as _pm
 from repro.kernels import pann_matmul_packed as _pk
@@ -114,44 +132,106 @@ def _matmul_ref(q8: Array, w_q: Array, s, gamma: Array, zcol: Array
     return (y_int - zcol).astype(jnp.float32) * s * gamma
 
 
-def _matmul_fused(q8: Array, w_q: Array, s, gamma: Array, zcol: Array,
-                  n_planes: int, interpret: bool) -> Array:
-    """Bit-plane Pallas kernel on planes rebuilt from the int8 codes."""
+def _qparams(s, z, n_lvl) -> Array:
+    """(1, 3) f32 SMEM block [s, z, n_lvl] for the fused-prologue kernels."""
+    return jnp.stack([jnp.asarray(s, jnp.float32).reshape(()),
+                      jnp.asarray(z, jnp.float32).reshape(()),
+                      jnp.asarray(n_lvl, jnp.float32).reshape(())]
+                     ).reshape(1, 3)
+
+
+def _matmul_fused(xf: Array, w_q: Array, s, z, n_lvl, gamma: Array,
+                  zcol: Array, n_planes: int, interpret: bool,
+                  blocks: tuple[int, int, int] | None = None) -> Array:
+    """Fused-prologue bit-plane kernel on planes rebuilt from the int8
+    codes: fp32 activations in, affine-encoded in VMEM (codes never touch
+    HBM). Padded fp32 rows/cols encode to the code z, which multiplies the
+    zero-padded plane region — an exact no-op, then sliced away."""
     pos = bitplane_decompose(jnp.maximum(w_q, 0), n_planes)
     neg = bitplane_decompose(jnp.maximum(-w_q.astype(jnp.int32), 0),
                              n_planes)
-    m, k = q8.shape
+    m, k = xf.shape
     n = w_q.shape[-1]
-    bm, bn, bk = ops._pick_blocks(m, n, k)
-    xp = ops._pad_to(ops._pad_to(q8, bm, 0), bk, 1)
+    bm, bn, bk = blocks or autotune.blocks_for(m, k, n, n_planes, "fused")
+    xp = ops._pad_to(ops._pad_to(xf, bm, 0), bk, 1)
     pp = ops._pad_to(ops._pad_to(pos, bk, 1), bn, 2)
     pn = ops._pad_to(ops._pad_to(neg, bk, 1), bn, 2)
-    sx = jnp.broadcast_to(jnp.reshape(s, (1, 1)), (xp.shape[0], 1))
     gp = ops._pad_to(gamma, bn, 0)
     zp = ops._pad_to(zcol, bn, 0)
-    y = _pm.pann_matmul(xp, pp, pn, sx, gp, zp, mode="fused",
-                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = _pm.pann_matmul_act(xp, pp, pn, _qparams(s, z, n_lvl), gp, zp,
+                            mode="fused", bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
     return y[:m, :n]
 
 
-def _matmul_packed(q8: Array, pp: Array, pn: Array, s, gamma: Array,
-                   zcol: Array, interpret: bool) -> Array:
-    """Packed-plane Pallas kernel on the uint8 artifact leaves."""
-    m, k = q8.shape
+def _matmul_packed(xf: Array, pp: Array, pn: Array, s, z, n_lvl,
+                   gamma: Array, zcol: Array, interpret: bool,
+                   blocks: tuple[int, int, int] | None = None) -> Array:
+    """Fused-prologue packed-plane kernel on the uint8 artifact leaves."""
+    m, k = xf.shape
     k_full = pp.shape[-2] * 8        # pack_planes padded K up to 8
     n = pp.shape[-1]
-    bm, bn, bk = ops._pick_blocks(m, n, k_full)
+    n_planes = pp.shape[-3]
+    if blocks is None:
+        blocks = autotune.blocks_for(m, k_full, n, n_planes, "packed")
+    bm, bn, bk = blocks
     bk = _pick_bk(bk, 8)             # the packed kernel needs bk % 8 == 0
-    xp = ops._pad_to(ops._pad_to(q8, bm, 0), bk, 1)
+    xp = ops._pad_to(ops._pad_to(xf, bm, 0), k_full, 1)
+    xp = ops._pad_to(xp, bk, 1)
     k_pad = xp.shape[1]
     ppp = ops._pad_to(ops._pad_to(pp, k_pad // 8, 1), bn, 2)
     pnp = ops._pad_to(ops._pad_to(pn, k_pad // 8, 1), bn, 2)
-    sx = jnp.broadcast_to(jnp.reshape(s, (1, 1)), (xp.shape[0], 1))
     gp = ops._pad_to(gamma, bn, 0)
     zp = ops._pad_to(zcol, bn, 0)
-    y = _pk.pann_matmul_packed(xp, ppp, pnp, sx, gp, zp,
-                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = _pk.pann_matmul_packed_act(xp, ppp, pnp, _qparams(s, z, n_lvl),
+                                   gp, zp, bm=bm, bn=bn, bk=bk,
+                                   interpret=interpret)
     return y[:m, :n]
+
+
+def _act_scalars(xf: Array, p: dict) -> tuple[Array, Array, Array]:
+    """The per-projection activation-quantizer scalars (s, z, n_lvl).
+
+    PREFERS the artifact leaves hoisted by ``models/serving``:
+    ``act_nlvl`` (= min(act_n, 127), saving a min per projection per decode
+    step) and — for export-frozen calibration — ``act_s``/``act_z``, which
+    turn the whole derivation into two leaf reads. Both hoists are computed
+    at build time with the IDENTICAL ``core.quant`` op sequence used here,
+    so hoisted and derived artifacts are bit-exact. Fallbacks keep
+    pre-hoist artifacts (and hand-built test leaves) serving unchanged.
+
+    include_zero (inside ``act_range_bounds``) bounds z to [0, n]: without
+    it, activations that do not span zero produce |z| far outside int32 and
+    the zcol correction wraps.
+    """
+    nlvl = p.get("act_nlvl")
+    if nlvl is not None:
+        n_lvl = jnp.asarray(nlvl, jnp.float32).reshape(())
+    else:
+        act_n = p.get("act_n")
+        if act_n is None:
+            n_lvl = jnp.float32(HALF_RANGE_LEVELS)
+        else:
+            n_lvl = jnp.minimum(jnp.asarray(act_n, jnp.float32).reshape(()),
+                                HALF_RANGE_LEVELS)
+    act_s = p.get("act_s")
+    if act_s is not None:
+        # frozen calibration with build-time-hoisted scalars
+        return (jnp.asarray(act_s, jnp.float32).reshape(()),
+                jnp.asarray(p["act_z"], jnp.float32).reshape(()),
+                n_lvl)
+    act_lo = p.get("act_lo")
+    if act_lo is not None:
+        # export-frozen EMA calibration without the hoist (older
+        # artifacts): same zero-extended frozen-range convention as the
+        # QAT forward — one range convention everywhere
+        lo, hi = quant.act_range_bounds(
+            xf, jnp.asarray(act_lo, jnp.float32).reshape(()),
+            jnp.asarray(p["act_hi"], jnp.float32).reshape(()))
+    else:
+        lo, hi = quant.act_range_bounds(xf, include_zero=True)
+    s, z = quant.affine_scale_zp(lo, hi, n_lvl)
+    return s, z, n_lvl
 
 
 def serving_linear(x: Array, p: dict, backend: str) -> Array:
@@ -177,36 +257,14 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     # compiles the same way whichever backend sits between the barriers —
     # the bit-exactness contract must survive jit, not just eager mode
     xf = jax.lax.optimization_barrier(x.reshape(-1, k).astype(jnp.float32))
-    act_n = p.get("act_n")
-    if act_n is None:
-        n_lvl = jnp.float32(HALF_RANGE_LEVELS)
-    else:
-        n_lvl = jnp.minimum(
-            jnp.asarray(act_n, jnp.float32).reshape(()), HALF_RANGE_LEVELS)
-    # include_zero bounds z to [0, n]: without it, activations that do not
-    # span zero produce |z| far outside int32 and the zcol correction wraps
-    act_lo = p.get("act_lo")
-    if act_lo is not None:
-        # export-frozen EMA calibration (models/serving.
-        # quantize_params_for_serving(calib=...)): quantize against the
-        # static training-time range. affine_from_range applies the same
-        # zero extension as the dynamic path below (z stays in [0, n]) and
-        # is the SAME function the QAT forward and the legacy serving
-        # branch use — one range convention everywhere. All backends share
-        # this one quantizer, so their bit-exactness contract holds for
-        # calibrated artifacts too.
-        q, s, z = quant.affine_from_range(
-            xf, n_lvl,
-            jnp.asarray(act_lo, jnp.float32).reshape(()),
-            jnp.asarray(p["act_hi"], jnp.float32).reshape(()))
-    else:
-        q, s, z = quant.affine_quant_levels(xf, n_lvl, include_zero=True)
-    # seal the quantization chain as well: left open, XLA folds it into the
-    # backend-specific consumer cluster (e.g. strength-reducing the x/s
-    # divide differently next to a dot than next to a pallas call) and the
-    # codes themselves stop matching across backends
-    q8, s, z = jax.lax.optimization_barrier(
-        (q.astype(jnp.int8), s, z))
+    s, z, n_lvl = _act_scalars(xf, p)
+    # seal the quantizer scalars: left open, XLA folds their derivation
+    # into the backend-specific consumer cluster (e.g. strength-reducing
+    # the x/s divide differently next to a dot than next to a pallas call)
+    # and the codes stop matching across backends. The Pallas backends
+    # consume these SAME sealed scalars — the in-kernel encode and the ref
+    # encode below run the identical affine map on identical inputs.
+    s, z, n_lvl = jax.lax.optimization_barrier((s, z, n_lvl))
     gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
     # the zero-point correction as an EXACT int32 row: s(q - z) @ (gamma*w)
     # = s*gamma*(q @ w_q - z*colsum(w_q)). Subtracting inside the integer
@@ -235,10 +293,69 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     if name == "fused":
         n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
                     else INT8_PLANES)
-        y = _matmul_fused(q8, w_q, s, gamma, zcol, n_planes, interpret)
+        y = _matmul_fused(xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
+                          interpret)
     elif name == "packed":
-        y = _matmul_packed(q8, p["w_planes_pos"], p["w_planes_neg"],
-                           s, gamma, zcol, interpret)
+        y = _matmul_packed(xf, p["w_planes_pos"], p["w_planes_neg"],
+                           s, z, n_lvl, gamma, zcol, interpret)
     else:
+        # the jnp oracle materializes the codes (quant.affine_encode — the
+        # formula the kernels inline) and seals them so XLA cannot re-fuse
+        # the encode into the dot differently than the kernels would
+        q8 = jax.lax.optimization_barrier(
+            quant.affine_encode(xf, s, z, n_lvl).astype(jnp.int8))
         y = _matmul_ref(q8, w_q, s, gamma, zcol)
     return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Offline block autotuning (ServeEngine(autotune=True) / launch --autotune)
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, iters: int = 3) -> float:
+    fn()                               # compile + warm
+    t0 = time.perf_counter()
+    r = None
+    for _ in range(iters):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def tune_projection(m: int, p: dict, backend: str) -> None:
+    """Measure-and-cache the best (bm, bn, bk) for one projection artifact
+    at decode row count ``m``. Strictly offline: call before ``warmup`` —
+    ``serving_linear`` then picks the cached blocks up at trace time
+    (``autotune.blocks_for``). Off-TPU the heuristic is recorded untimed
+    (interpret-mode timings are emulator noise; see ``kernels.autotune``).
+    """
+    name, _ = parse_backend(backend)
+    if name == "ref":
+        return
+    w_q = p["w_q"]
+    assert w_q.ndim == 2, w_q.shape
+    k, n = w_q.shape
+    n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
+                else INT8_PLANES)
+    key = jax.random.PRNGKey(0)
+    xf = jax.random.normal(key, (m, k), jnp.float32)
+    s, z, n_lvl = _act_scalars(xf, p)
+    colsum = p.get("w_colsum")
+    if colsum is None:
+        colsum = jnp.sum(w_q.astype(jnp.int32), axis=-2)
+    zcol = z.astype(jnp.int32) * colsum
+    gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
+    k_eff = p["w_planes_pos"].shape[-2] * 8 if name == "packed" else k
+
+    def runner(blocks):
+        if name == "packed":
+            fn = lambda: _matmul_packed(
+                xf, p["w_planes_pos"], p["w_planes_neg"], s, z, n_lvl,
+                gamma, zcol, interpret=not ops.on_tpu(), blocks=blocks)
+        else:
+            fn = lambda: _matmul_fused(
+                xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
+                interpret=not ops.on_tpu(), blocks=blocks)
+        return _time_call(fn)
+
+    autotune.tune(m, k_eff, n, n_planes, name, runner)

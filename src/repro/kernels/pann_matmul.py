@@ -18,6 +18,16 @@ Two compute modes, numerically identical:
 Both paths accumulate in int32 and fuse the output dequantization
 (y = y_int * s_x * gamma[n]), so the integer result is bit-exact w.r.t. the
 reference oracle in ``repro.kernels.ref``.
+
+``pann_matmul_act`` is the fused-prologue variant (ROADMAP item 3): it takes
+fp32 activations straight from HBM and computes the affine codes
+``clip(round(x/s) + z, 0, n)`` tile-locally in VMEM — the int8 code tensor
+never exists in HBM, removing the fp32→int8 round-trip the standalone
+``quantize_act`` path pays per projection. The (s, z, n) scalars are computed
+ONCE outside the kernel (a cheap global reduction; see ``dispatch``) with the
+one ``core.quant`` affine convention, so fused and unfused paths stay
+bit-exact. Weight planes are streamed with MANUAL double-buffered DMAs:
+plane i+1 is in flight while plane i is being shift-added/multiplied.
 """
 from __future__ import annotations
 
@@ -116,4 +126,156 @@ def pann_matmul(x_q: Array, planes_pos: Array, planes_neg: Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_q, planes_pos, planes_neg, s_x, gamma.reshape(1, -1),
+      zcol.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Fused act-quant prologue + double-buffered plane DMAs
+# ---------------------------------------------------------------------------
+
+def _pann_matmul_act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref,
+                            zcol_ref, o_ref, xbuf, codes, pos_buf, neg_buf,
+                            acc_ref, xsem, pos_sem, neg_sem, *,
+                            n_planes: int, k_steps: int, bk: int, mode: str):
+    """Grid = (M/bm, N/bn, K/bk), kk innermost.
+
+    Dataflow per grid step:
+      * j == 0 (first pass over a row panel): DMA the (bm, bk) fp32 x chunk
+        from HBM and encode it into the persistent (bm, K) int8 ``codes``
+        scratch with the affine map ``clip(round(x/s) + z, 0, n)`` —
+        op-for-op ``core.quant.affine_encode``. Later j re-read ``codes``
+        from VMEM, so the fp32 activations cross HBM exactly once and the
+        codes never do.
+      * every step: the P weight-plane tiles stream through two VMEM slots
+        with manual DMAs — plane p+1's copy is started BEFORE plane p's
+        wait, so the next transfer overlaps the current plane's VPU
+        shift-add (and MXU pass in 'planes' mode).
+    """
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    s = qp_ref[0, 0]
+    z = qp_ref[0, 1]
+    n_clip = qp_ref[0, 2]
+    bm = xbuf.shape[0]
+    bn = o_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _encode_panel():
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)], xbuf, xsem)
+        cp.start()
+        cp.wait()
+        # VERBATIM core.quant.affine_encode — change both or neither
+        codes[:, pl.ds(kk * bk, bk)] = jnp.clip(
+            jnp.round(xbuf[...] / s) + z, 0.0, n_clip).astype(jnp.int8)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = codes[:, pl.ds(kk * bk, bk)]            # (bm, bk) int8 codes
+
+    def plane_dma(buf, hbm, sem, slot, p):
+        return pltpu.make_async_copy(
+            hbm.at[p, pl.ds(kk * bk, bk), pl.ds(j * bn, bn)],
+            buf.at[slot], sem.at[slot])
+
+    plane_dma(pos_buf, pos_hbm, pos_sem, 0, 0).start()
+    plane_dma(neg_buf, neg_hbm, neg_sem, 0, 0).start()
+
+    if mode == "fused":
+        w = jnp.zeros((bk, bn), jnp.int8)
+        for p in range(n_planes):
+            slot = p % 2
+            if p + 1 < n_planes:
+                plane_dma(pos_buf, pos_hbm, pos_sem, 1 - slot, p + 1).start()
+                plane_dma(neg_buf, neg_hbm, neg_sem, 1 - slot, p + 1).start()
+            plane_dma(pos_buf, pos_hbm, pos_sem, slot, p).wait()
+            plane_dma(neg_buf, neg_hbm, neg_sem, slot, p).wait()
+            w = w + jnp.int8(1 << p) * (pos_buf[slot] - neg_buf[slot])
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:  # 'planes': per-plane addition-only passes, pos/neg separated
+        acc_p = jnp.zeros((bm, bn), jnp.int32)
+        acc_n = jnp.zeros((bm, bn), jnp.int32)
+        for p in range(n_planes):
+            slot = p % 2
+            if p + 1 < n_planes:
+                plane_dma(pos_buf, pos_hbm, pos_sem, 1 - slot, p + 1).start()
+                plane_dma(neg_buf, neg_hbm, neg_sem, 1 - slot, p + 1).start()
+            plane_dma(pos_buf, pos_hbm, pos_sem, slot, p).wait()
+            plane_dma(neg_buf, neg_hbm, neg_sem, slot, p).wait()
+            shift = jnp.int32(1 << p)
+            acc_p += shift * jax.lax.dot_general(
+                x, pos_buf[slot], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc_n += shift * jax.lax.dot_general(
+                x, neg_buf[slot], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        acc_ref[...] += acc_p - acc_n           # the one Eq.-(6) subtraction
+
+    @pl.when(kk == k_steps - 1)
+    def _finalize():
+        y = (acc_ref[...] - zcol_ref[...]).astype(jnp.float32)
+        o_ref[...] = y * s * gamma_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret"))
+def pann_matmul_act(x: Array, planes_pos: Array, planes_neg: Array,
+                    qparams: Array, gamma: Array, zcol: Array | None = None,
+                    *, mode: str = "fused", bm: int = 128, bn: int = 128,
+                    bk: int = 128, interpret: bool = True) -> Array:
+    """Fused-prologue bit-plane matmul: quantize-in-kernel, codes never in HBM.
+
+    y[m, n] = ((q(x) @ (W+ - W-))[m, n] - zcol[n]) * s * gamma[n]
+    with q(x) = clip(round(x/s) + z, 0, n_lvl) computed in VMEM.
+
+    x:          (M, K) f32 activations (HBM-resident; read once per row panel)
+    planes_pos: (P, K, N) int8 in {0, 1}   (HBM; manually double-buffered)
+    planes_neg: (P, K, N) int8 in {0, 1}
+    qparams:    (1, 3) f32 SMEM scalars [s, z, n_lvl] — computed outside
+                with ``core.quant.affine_scale_zp`` so every backend shares
+                one (s, z) derivation (the bit-exactness contract)
+    gamma:      (N,)  f32 per-channel PANN steps
+    zcol:       (N,) int32 zero-point/bias row (z * colsum(w_q) [- b_q];
+                None = 0), subtracted in the exact int32 accumulator
+    """
+    m, k = x.shape
+    p, k2, n = planes_pos.shape
+    assert k == k2 and planes_neg.shape == planes_pos.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert qparams.shape == (1, 3)
+    if zcol is None:
+        zcol = jnp.zeros((n,), jnp.int32)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    kernel = functools.partial(_pann_matmul_act_kernel, n_planes=p,
+                               k_steps=k_steps, bk=bk, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # qparams
+            pl.BlockSpec(memory_space=pltpu.ANY),        # x (manual DMA)
+            pl.BlockSpec(memory_space=pltpu.ANY),        # planes_pos
+            pl.BlockSpec(memory_space=pltpu.ANY),        # planes_neg
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), jnp.float32),           # fp32 x landing pad
+            pltpu.VMEM((bm, k), jnp.int8),               # persistent codes
+            pltpu.VMEM((2, bk, bn), jnp.int8),           # plane slots (pos)
+            pltpu.VMEM((2, bk, bn), jnp.int8),           # plane slots (neg)
+            pltpu.VMEM((bm, bn), jnp.int32),             # accumulator
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(qparams, x, planes_pos, planes_neg, gamma.reshape(1, -1),
       zcol.reshape(1, -1))

@@ -113,3 +113,122 @@ def pann_matmul_packed(x_q: Array, packed_pos: Array, packed_neg: Array,
         interpret=interpret,
     )(x_q, packed_pos, packed_neg, s_x, gamma.reshape(1, -1),
       zcol.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Fused act-quant prologue + double-buffered packed-plane DMAs
+# ---------------------------------------------------------------------------
+
+def _act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref, zcol_ref, o_ref,
+                xbuf, codes, pos_buf, neg_buf, acc_ref, xsem, pos_sem,
+                neg_sem, *, n_planes: int, k_steps: int, bk: int):
+    """Packed twin of ``pann_matmul._pann_matmul_act_kernel`` (see its
+    docstring for the dataflow): fp32 x is DMA'd + affine-encoded into a
+    persistent VMEM codes panel on the first j pass, and the (bk/8, bn)
+    uint8 plane tiles stream through two VMEM slots with the copy of plane
+    p+1 started before plane p's wait, overlapping transfer with the VPU
+    unpack/shift-add."""
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    s = qp_ref[0, 0]
+    z = qp_ref[0, 1]
+    n_clip = qp_ref[0, 2]
+    bm = xbuf.shape[0]
+    bn = o_ref.shape[1]
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+
+    @pl.when(j == 0)
+    def _encode_panel():
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)], xbuf, xsem)
+        cp.start()
+        cp.wait()
+        # VERBATIM core.quant.affine_encode — change both or neither
+        codes[:, pl.ds(kk * bk, bk)] = jnp.clip(
+            jnp.round(xbuf[...] / s) + z, 0.0, n_clip).astype(jnp.int8)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = codes[:, pl.ds(kk * bk, bk)]            # (bm, bk) int8 codes
+
+    def plane_dma(buf, hbm, sem, slot, p):
+        return pltpu.make_async_copy(
+            hbm.at[p, pl.ds(kk * (bk // 8), bk // 8), pl.ds(j * bn, bn)],
+            buf.at[slot], sem.at[slot])
+
+    def unpack(tile):                           # (bk//8, bn) -> (bk, bn)
+        bits = (tile[:, None, :] >> shifts[None, :, None]) & jnp.uint8(1)
+        return bits.reshape(bk, bn).astype(jnp.int8)
+
+    plane_dma(pos_buf, pos_hbm, pos_sem, 0, 0).start()
+    plane_dma(neg_buf, neg_hbm, neg_sem, 0, 0).start()
+    w = jnp.zeros((bk, bn), jnp.int8)
+    for p in range(n_planes):
+        slot = p % 2
+        if p + 1 < n_planes:
+            plane_dma(pos_buf, pos_hbm, pos_sem, 1 - slot, p + 1).start()
+            plane_dma(neg_buf, neg_hbm, neg_sem, 1 - slot, p + 1).start()
+        plane_dma(pos_buf, pos_hbm, pos_sem, slot, p).wait()
+        plane_dma(neg_buf, neg_hbm, neg_sem, slot, p).wait()
+        w = w + jnp.int8(1 << p) * (unpack(pos_buf[slot])
+                                    - unpack(neg_buf[slot]))
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(kk == k_steps - 1)
+    def _done():
+        o_ref[...] = ((acc_ref[...] - zcol_ref[...]).astype(jnp.float32)
+                      * s * gamma_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pann_matmul_packed_act(x: Array, packed_pos: Array, packed_neg: Array,
+                           qparams: Array, gamma: Array,
+                           zcol: Array | None = None, *, bm: int = 128,
+                           bn: int = 128, bk: int = 128,
+                           interpret: bool = True) -> Array:
+    """Fused-prologue packed-plane matmul: quantize-in-kernel on the
+    2*P/8-bytes-per-weight deployment artifact.
+
+    x (M, K) f32; packed_pos/neg (P, K/8, N) uint8; K % bk == 0, bk % 8 == 0.
+    qparams (1, 3) f32 SMEM scalars [s, z, n_lvl] (``quant.affine_scale_zp``
+    outside the kernel — the shared cross-backend derivation). zcol (N,)
+    int32: zero-point/bias row, subtracted in the exact int32 accumulator.
+    """
+    m, k = x.shape
+    p, k8, n = packed_pos.shape
+    assert k8 * 8 == k and bk % 8 == 0
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert qparams.shape == (1, 3)
+    if zcol is None:
+        zcol = jnp.zeros((n,), jnp.int32)
+    k_steps = k // bk
+    kernel = functools.partial(_act_kernel, n_planes=p, k_steps=k_steps,
+                               bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # qparams
+            pl.BlockSpec(memory_space=pltpu.ANY),        # x (manual DMA)
+            pl.BlockSpec(memory_space=pltpu.ANY),        # packed_pos
+            pl.BlockSpec(memory_space=pltpu.ANY),        # packed_neg
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), jnp.float32),           # fp32 x landing pad
+            pltpu.VMEM((bm, k), jnp.int8),               # persistent codes
+            pltpu.VMEM((2, bk // 8, bn), jnp.uint8),     # plane slots (pos)
+            pltpu.VMEM((2, bk // 8, bn), jnp.uint8),     # plane slots (neg)
+            pltpu.VMEM((bm, bn), jnp.int32),             # accumulator
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(qparams, x, packed_pos, packed_neg, gamma.reshape(1, -1),
+      zcol.reshape(1, -1))

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ops
+
 Array = jax.Array
 
 
@@ -31,19 +33,32 @@ def _quantize_kernel(x_ref, q_ref, s_ref, *, qmax: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def quantize_act(x: Array, *, bits: int = 8, bm: int = 128,
-                 interpret: bool = True) -> tuple[Array, Array]:
-    """x (M, K) float -> (codes int8 (M, K), scales f32 (M, 1))."""
+                 interpret: bool | None = None) -> tuple[Array, Array]:
+    """x (M, K) float -> (codes int8 (M, K), scales f32 (M, 1)).
+
+    ``interpret=None`` resolves by platform (``ops.on_tpu``), matching the
+    matmul wrappers — the old unconditional ``interpret=True`` default ran
+    the emulator even on TPU. Ragged M (not a multiple of ``bm``) is padded
+    up and sliced back: padded rows are all-zero, so their amax floors at
+    the 1e-12 epsilon and their codes are exact zeros — callers see only
+    the true rows either way.
+    """
+    interpret = (not ops.on_tpu()) if interpret is None else interpret
     m, k = x.shape
-    assert m % bm == 0, (m, bm)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    mp = m + pad
     qmax = (1 << (bits - 1)) - 1  # half-range unsigned (App. A.4)
     kernel = functools.partial(_quantize_kernel, qmax=qmax)
-    return pl.pallas_call(
+    q, s = pl.pallas_call(
         kernel,
-        grid=(m // bm,),
+        grid=(mp // bm,),
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0)),
                    pl.BlockSpec((bm, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((m, k), jnp.int8),
-                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((mp, k), jnp.int8),
+                   jax.ShapeDtypeStruct((mp, 1), jnp.float32)],
         interpret=interpret,
     )(x)
+    return q[:m], s[:m]

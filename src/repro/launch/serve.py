@@ -71,6 +71,7 @@ def serve_ladder(args) -> dict:
                          max_batch=args.batch, max_len=max_len,
                          allocation=args.allocation,
                          backend=args.backend or None,
+                         autotune=args.autotune,
                          frontend_kwargs_fn=fe_fn)
     engine.warmup()
     total_macs = sum(m.macs for m in engine.profile)
@@ -142,6 +143,12 @@ def main(argv=None) -> dict:
                          "dequant. With --quant pann (no ladder) the "
                          "weights are materialized as the serving artifact "
                          "and decode runs through the chosen backend.")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure-and-cache the best Pallas block shapes "
+                         "per projection before warmup (kernels/autotune; "
+                         "persistent per-device cache, $REPRO_AUTOTUNE_CACHE "
+                         "overrides the location). Off-TPU the VMEM "
+                         "heuristic is recorded untimed. Ladder mode only.")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")

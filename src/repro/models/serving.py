@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import pann as pann_core
 from repro.core import policy as pol
+from repro.core import quant as quant_core
 from repro.core.unsigned import unsigned_split
 from repro.dist import sharding as shardlib
 from repro.kernels.pann_matmul_packed import pack_planes
@@ -147,18 +148,34 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                 if ab is not None:
                     # match the weight's stack dims (e.g. the vmapped group
                     # axis) so scanned decode bodies can slice it per group
-                    out["act_n"] = jnp.full(w.shape[:-2],
+                    stack = w.shape[:-2]
+                    out["act_n"] = jnp.full(stack,
                                             float((1 << int(ab)) - 1),
                                             jnp.float32)
+                    # hoisted kernel-facing level count min(act_n, 127):
+                    # the decode step reads the leaf instead of re-deriving
+                    # the half-range cap per projection per token
+                    # (dispatch._act_scalars; 127 = 2^7 - 1 half-range)
+                    n_lvl = float(min((1 << int(ab)) - 1, 127))
+                    out["act_nlvl"] = jnp.full(stack, n_lvl, jnp.float32)
                     if calib:
                         rng = calib.get(pol.serving_path(trail))
                         if rng is not None and float(rng[0]) <= float(rng[1]):
-                            out["act_lo"] = jnp.full(w.shape[:-2],
-                                                     float(rng[0]),
+                            out["act_lo"] = jnp.full(stack, float(rng[0]),
                                                      jnp.float32)
-                            out["act_hi"] = jnp.full(w.shape[:-2],
-                                                     float(rng[1]),
+                            out["act_hi"] = jnp.full(stack, float(rng[1]),
                                                      jnp.float32)
+                            # frozen ranges admit build-time (s, z): the
+                            # SAME f32 op sequence as the serve-time
+                            # derivation (quant.act_range_bounds with a
+                            # seen range + affine_scale_zp), so hoisted
+                            # and derived artifacts stay bit-exact
+                            lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
+                            hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
+                            s, z = quant_core.affine_scale_zp(
+                                lo, hi, jnp.float32(n_lvl))
+                            out["act_s"] = jnp.full(stack, s, jnp.float32)
+                            out["act_z"] = jnp.full(stack, z, jnp.float32)
                 if "b" in node:
                     out["b"] = node["b"]
                 return out

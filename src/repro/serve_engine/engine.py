@@ -53,6 +53,7 @@ class ServeEngine:
                  par=None, mse_dim: Optional[float] = None,
                  allocation: str = "uniform",
                  backend: Optional[str] = None,
+                 autotune: bool = False,
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
@@ -96,6 +97,14 @@ class ServeEngine:
              for op in self.ladder}, mesh=mesh, par=par,
             pack_planes=needs_planes,
             plane_count=serving.LADDER_PLANE_COUNT if needs_planes else None)
+        # offline block autotuning (kernels/autotune): measure-and-cache the
+        # best Pallas block shapes per projection BEFORE the decode step is
+        # ever traced — serving_linear then reads the cache at trace time,
+        # so tuning never invalidates the one-compiled-decode-step claim
+        # (all rungs share avals, hence shapes, hence tuning decisions)
+        if autotune and backend is not None \
+                and dispatch.parse_backend(backend)[0] != "ref":
+            self._autotune_projections()
         self._frontend_kwargs_fn = frontend_kwargs_fn
         self._step = jax.jit(lambda p, s, t: MD.decode_step(p, cfg, s, t))
         self.scheduler = Scheduler(self.ladder, self.max_batch)
@@ -104,6 +113,38 @@ class ServeEngine:
         self.rung_switches = 0
         self._last_step_bits: Optional[int] = None
         self._macs_by_ctx: dict[int, Any] = {}   # macs_per_token memo
+
+    # -- offline autotuning -------------------------------------------------
+
+    def _autotune_projections(self) -> None:
+        """Tune every distinct projection shape in the (shape-identical)
+        variants once, at the engine's decode row count. Idempotent: cached
+        shapes short-circuit inside ``autotune.tune``."""
+        variant = next(iter(self.variants.values()))
+        seen: set = set()
+
+        def walk(node):
+            if isinstance(node, dict):
+                if "w_q" in node:
+                    sd = node["w_q"].ndim - 2    # scan-stacked leading dims
+                    leaf = {k: (v[(0,) * sd]
+                                if sd and getattr(v, "ndim", 0) >= sd else v)
+                            for k, v in node.items()}
+                    key = (leaf["w_q"].shape,
+                           leaf["w_planes_pos"].shape[-3]
+                           if "w_planes_pos" in leaf else None)
+                    if key not in seen:
+                        seen.add(key)
+                        dispatch.tune_projection(self.max_batch, leaf,
+                                                 self.backend)
+                    return
+                for v in node.values():
+                    walk(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    walk(v)
+
+        walk(variant)
 
     # -- jit bookkeeping ----------------------------------------------------
 
