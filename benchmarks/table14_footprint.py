@@ -1,20 +1,58 @@
-"""Paper Tables 14-15 analogue: PANN runtime memory footprint and latency.
+"""Paper Tables 14-15 analogue: PANN runtime memory footprint and latency —
+plus the MEASURED weight+cache footprint gate for the quantized KV cache.
 
-For each power budget (expressed as a b-bit unsigned MAC): the optimal
-(b~x, R) plan, the measured per-neuron addition factor and weight-storage
-bits b_R on real (trained) weights, and the derived activation/weight memory
-and latency factors relative to the b-bit baseline.
+Two instruments:
+
+  * ``run(steps)`` — the original trained-weights analysis: per power
+    budget, the optimal (b~x, R) plan, the measured addition factor and
+    weight-storage bits b_R, and the derived memory/latency factors.
+  * ``measure_footprint()`` — byte-counted serving footprint on a real
+    (reduced) artifact: the packed bit-plane weight leaves + the quantized
+    KV decode cache vs the fp32 weights + fp cache, per ladder budget.
+    This is what ``--check`` gates: the committed baseline snapshot
+    (benchmarks/baselines/footprint.json) must be matched within tolerance
+    AND the 4-bit budget must keep a >= 2x combined weight+cache reduction
+    (docs/kv_cache.md; the PR-7 acceptance floor).
+
+Refresh the baseline by copying benchmarks/results/footprint.json over
+benchmarks/baselines/footprint.json when the reduced config or the artifact
+layout legitimately changes.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit, save_json, train_small_lm
+from repro import configs
+from repro.configs.base import QuantConfig
 from repro.core import pann as pann_core
 from repro.core import planner
+from repro.models import model as MD
+from repro.models import serving
+
+# combined weight+cache reduction the 4-bit budget must clear (ISSUE 7
+# acceptance criterion) — a HARD floor, independent of the baseline
+MIN_REDUCTION_AT_4BIT = 2.0
+
+# footprint ratios are deterministic shape math; the tolerance only absorbs
+# benign layout drift (e.g. a new tiny artifact leaf), not regressions
+REGRESSION_TOLERANCE = 0.05
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "footprint.json")
+
+# deployed-weight leaves the 'packed' decode step actually reads; w_q (the
+# unpacked int8 codes) is the non-packed backends' input and is NOT shipped
+# alongside the planes, so it does not count toward the packed footprint
+_PACKED_WEIGHT_KEYS = {"w_planes_pos", "w_planes_neg", "w_scale",
+                       "w_colsum", "act_n", "act_nlvl", "b"}
 
 
 def run(steps: int = 120) -> dict:
@@ -55,5 +93,145 @@ def run(steps: int = 120) -> dict:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Measured weight+cache serving footprint (the --check gate)
+# ---------------------------------------------------------------------------
+
+def _leaf_bytes(tree, keys=None) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if not hasattr(leaf, "dtype"):
+            continue
+        if keys is None or getattr(path[-1], "key", "") in keys:
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def measure_footprint(arch: str = "llama3-8b", budgets=(2, 4, 6),
+                      batch: int = 2, max_len: int = 64, seed: int = 0
+                      ) -> list[dict]:
+    """Byte-count the deployed serving state per ladder budget.
+
+    Weights: the packed bit-plane artifact (2 x b_R planes at 8 codes/byte
+    + scales/colsum/act leaves) vs the SAME projections in fp32 (4 B/elem;
+    w_q's logical shape). Cache: the whole quantized decode state (packed
+    7-plane K/V codes + per-position quantizer rows) vs the fp decode
+    state — both from ``model.init_decode_state``, so every cached layer of
+    the real architecture is counted, not a per-layer estimate.
+    """
+    cfg = configs.reduced(configs.get_config(arch))
+    cfg = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+    params = MD.init_params(jax.random.PRNGKey(seed), cfg)
+
+    fp_state = MD.init_decode_state(params, cfg, batch, max_len)
+    fp_cache_bytes = _leaf_bytes(fp_state)
+
+    rows = []
+    for bits in sorted({int(b) for b in budgets}):
+        plan = planner.plan_with_theory(planner.budget_from_bits(bits))
+        cache_b = min(bits, 7)
+        cfg_q = dataclasses.replace(cfg, cache_bits=cache_b)
+        art = serving.quantize_params_for_serving(
+            params, cfg_q, r=plan.r, act_bits=plan.b_x_tilde,
+            pack_planes=True, cache_bits=cache_b)
+        w_packed = _leaf_bytes(art, _PACKED_WEIGHT_KEYS)
+        # fp32 bytes of the same projections: w_q preserves W's shape
+        w_fp = 4 * sum(
+            int(np.prod(leaf.shape))
+            for path, leaf in jax.tree_util.tree_leaves_with_path(art)
+            if getattr(path[-1], "key", "") == "w_q")
+        q_state = MD.init_decode_state(art, cfg_q, batch, max_len)
+        q_cache_bytes = _leaf_bytes(q_state)
+        reduction = (w_fp + fp_cache_bytes) / max(w_packed + q_cache_bytes,
+                                                  1)
+        rows.append({
+            "power_bits": bits,
+            "cache_bits": cache_b,
+            "weight_bytes_fp": w_fp,
+            "weight_bytes_packed": w_packed,
+            "cache_bytes_fp": fp_cache_bytes,
+            "cache_bytes_quant": q_cache_bytes,
+            "weight_reduction": round(w_fp / max(w_packed, 1), 3),
+            "cache_reduction": round(fp_cache_bytes
+                                     / max(q_cache_bytes, 1), 3),
+            "combined_reduction": round(reduction, 3),
+        })
+    return rows
+
+
+def check_footprint(rows: list[dict], baseline_path: str = BASELINE
+                    ) -> list[str]:
+    """The gate: baseline match within tolerance + the 4-bit hard floor."""
+    failures = []
+    at4 = next((r for r in rows if r["power_bits"] == 4), None)
+    if at4 is None:
+        failures.append("no 4-bit budget row measured — the acceptance "
+                        "floor is ungated")
+    elif at4["combined_reduction"] < MIN_REDUCTION_AT_4BIT:
+        failures.append(
+            f"4-bit budget: combined weight+cache reduction "
+            f"{at4['combined_reduction']:.2f}x < the "
+            f"{MIN_REDUCTION_AT_4BIT:.1f}x floor")
+    with open(baseline_path) as f:
+        base = {r["power_bits"]: r for r in json.load(f)["footprint"]}
+    measured = {r["power_bits"]: r for r in rows}
+    for bits in sorted(set(base) - set(measured)):
+        failures.append(f"budget {bits}b: in the baseline but not measured "
+                        f"— refresh {baseline_path}")
+    for bits, r in sorted(measured.items()):
+        b = base.get(bits)
+        if b is None:
+            failures.append(f"budget {bits}b: no baseline entry — refresh "
+                            f"{baseline_path}")
+            continue
+        floor = (1.0 - REGRESSION_TOLERANCE) * b["combined_reduction"]
+        if r["combined_reduction"] < floor:
+            failures.append(
+                f"budget {bits}b: combined reduction "
+                f"{r['combined_reduction']:.2f}x < {floor:.2f}x "
+                f"(baseline {b['combined_reduction']:.2f}x - "
+                f"{REGRESSION_TOLERANCE:.0%})")
+    return failures
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config, random-init weights, skip the "
+                         "trained-weights Table-14 sweep (the CI gate mode)")
+    ap.add_argument("--budgets", default="2,4,6")
+    ap.add_argument("--steps", type=int, default=120,
+                    help="training steps for the trained-weights sweep "
+                         "(ignored with --reduced)")
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed baseline snapshot")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    budgets = [int(b) for b in args.budgets.split(",")]
+    result = {
+        "mode": "reduced" if args.reduced else "full",
+        "arch": args.arch,
+        "table": None if args.reduced else run(steps=args.steps),
+        "footprint": measure_footprint(args.arch, budgets),
+    }
+    save_json("footprint.json", result)
+    at4 = next((r for r in result["footprint"] if r["power_bits"] == 4),
+               result["footprint"][0])
+    emit("footprint", (time.perf_counter() - t0) * 1e6,
+         f"{at4['power_bits']}-bit budget: weights "
+         f"x{at4['weight_reduction']} cache x{at4['cache_reduction']} "
+         f"combined x{at4['combined_reduction']}")
+    if args.check:
+        failures = check_footprint(result["footprint"])
+        if failures:
+            for f in failures:
+                print(f"[footprint] REGRESSION: {f}")
+            raise SystemExit(1)
+        print("[footprint] baseline check passed")
+    return result
+
+
 if __name__ == "__main__":
-    run()
+    main()

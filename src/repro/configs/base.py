@@ -71,6 +71,12 @@ class ModelConfig:
     # float dequant) | "ref" | "fused" | "packed" (repro.kernels.dispatch).
     # Trace-time static: one jitted decode step per backend.
     kernel_backend: Optional[str] = None
+    # Quantized KV cache: when set, decode stores K/V as packed bit-plane
+    # codes at this many unsigned bits (<= 7) and attention runs through the
+    # bit-plane decode kernel (kernels/pann_attention via dispatch). The
+    # *structure* knob only — per-rung cache bits ride as data leaves
+    # (k_nlvl/v_nlvl) so one jitted step serves mixed cache-rung ladders.
+    cache_bits: Optional[int] = None
     # --- misc ---
     tie_embeddings: bool = False
     scale_embed: bool = False     # gemma2: multiply embeddings by sqrt(d)

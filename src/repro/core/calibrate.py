@@ -43,9 +43,16 @@ UNSEEN = (float("inf"), float("-inf"))
 def calib_paths(cfg: ModelConfig) -> Tuple[str, ...]:
     """The module-path vocabulary calibrated for ``cfg``: every projection
     role in the cost profile (plus ``lm_head``, present even when the
-    embedding is tied — the unembed matmul quantizes its input too)."""
+    embedding is tied — the unembed matmul quantizes its input too).
+    Attention-bearing configs also calibrate the KV-cache roles
+    (``policy.CACHE_PATHS``): training observes post-RoPE K and V so
+    serving can freeze the cache quantizer ranges the same way it freezes
+    the projection-input ranges."""
+    from repro.core.policy import CACHE_PATHS
     paths = {m.path for m in costs.module_cost_profile(cfg)}
     paths.add("lm_head")
+    if any(p.startswith("attn.") for p in paths):
+        paths.update(CACHE_PATHS)
     return tuple(sorted(paths - _NON_LINEAR_PATHS))
 
 

@@ -233,6 +233,23 @@ def module_cost_profile(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
                  for p, row in sorted(acc.items()))
 
 
+def cache_cost_modules(cfg: ModelConfig, context_len: int = 4096
+                       ) -> tuple[ModuleCost, ...]:
+    """The KV-cache roles as allocator pseudo-modules: ``attn.k_cache``
+    (QK^T) and ``attn.v_cache`` (PV) each carry HALF of ``macs_per_token``'s
+    act_macs — the two act x act streams of decode attention — with one
+    head's reduction width as fan_in. Appending these to
+    ``module_cost_profile``'s output lets ``allocate_layerwise`` trade
+    cache bits against weight bits under ONE budget (priced by
+    ``policy.tree_power_per_token``'s cache-role split)."""
+    act = macs_per_token(cfg, context_len).act_macs
+    if not act:
+        return ()
+    hd = cfg.resolved_head_dim
+    return (ModuleCost(path="attn.k_cache", macs=0.5 * act, fan_in=hd),
+            ModuleCost(path="attn.v_cache", macs=0.5 * act, fan_in=hd))
+
+
 def network_macs(cfg: ModelConfig, shape: ShapeConfig) -> MacBreakdown:
     tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
         else shape.global_batch

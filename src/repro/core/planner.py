@@ -215,6 +215,32 @@ def _best_point_at(p: float, b_range: Sequence[int]
     return best
 
 
+# cache codes are unsigned affine with <= 7 planes (codes <= 127; see
+# kernels/ref.CACHE_PLANES) — the allocator's cache ladder is the integer
+# bit widths inside that envelope
+CACHE_B_RANGE = tuple(range(2, 8))
+
+
+def _cache_levels() -> list[tuple[float, int, float, float]]:
+    """Candidate (per-MAC power, bits, R=0, relative mse) levels for a
+    CACHE_PATHS pseudo-module: integer unsigned widths priced at
+    ``p_mac_unsigned`` (the same split ``policy.tree_power_per_token``
+    charges a cache-carrying tree) and scored with the Eq.-16 RUQ MSE at
+    b_x = b_w = b (codes quantize both operand streams of the act x act
+    MAC)."""
+    return [(pw.p_mac_unsigned(b), b, 0.0, mse_theory.mse_ruq(1.0, b, b))
+            for b in CACHE_B_RANGE]
+
+
+def _uniform_cache_bits(power_budget: float) -> int:
+    """Largest integer cache width an unsigned MAC at ``power_budget`` can
+    pay for — the uniform twin's cache point (floor 2 keeps the twin
+    constructible even under the smallest ladder budgets)."""
+    fit = [b for b in CACHE_B_RANGE if pw.p_mac_unsigned(b)
+           <= power_budget * (1 + 1e-9)]
+    return max(fit) if fit else CACHE_B_RANGE[0]
+
+
 def allocate_layerwise(power_budget: float,
                        profile: Sequence,
                        b_range: Sequence[int] = tuple(range(2, 9)),
@@ -242,26 +268,37 @@ def allocate_layerwise(power_budget: float,
     one wins (the recorded score is then the eval score).
 
     ``profile`` is ``costs.module_cost_profile(cfg)`` (anything with
-    .path/.macs/.fan_in works).
+    .path/.macs/.fan_in works). Appending ``costs.cache_cost_modules`` rows
+    puts the KV cache on the same knapsack: CACHE_PATHS entries move on the
+    integer unsigned ladder (``_cache_levels``) instead of the PANN grid,
+    and the closing R-fill — a PANN-only move (Eq. 13 has no cache
+    analogue) — spreads the slack over the PANN modules alone.
     """
     modules = [m for m in profile if m.macs > 0]
     if not modules:
         raise ValueError("empty module cost profile")
+    is_cache = [m.path in pol.CACHE_PATHS for m in modules]
     total_macs = sum(m.macs for m in modules)
     budget_total = power_budget * total_macs
 
     # the matched uniform twin: the global Algorithm-1 point everywhere
+    # (cache roles: the widest integer width the budget pays for)
     uni = plan_with_theory(power_budget, b_range=b_range)
+    uni_cache = pol.cache_module_quant(_uniform_cache_bits(power_budget))
     uniform_tree = pol.policy_tree(
         pol.pann_module_quant(uni.r, uni.b_x_tilde,
                               max(m.fan_in for m in modules)),
-        {m.path: pol.pann_module_quant(uni.r, uni.b_x_tilde, m.fan_in)
-         for m in modules})
+        {m.path: (uni_cache if c else
+                  pol.pann_module_quant(uni.r, uni.b_x_tilde, m.fan_in))
+         for m, c in zip(modules, is_cache)})
 
     # per-module candidate levels: (per-MAC power, b~x, R, mse), ascending
     grid = _level_grid(power_budget, n_levels)
     cands = []
-    for m in modules:
+    for m, c in zip(modules, is_cache):
+        if c:
+            cands.append(_cache_levels())
+            continue
         levels = []
         for p in grid:
             pt = _best_point_at(p, b_range)
@@ -299,21 +336,26 @@ def allocate_layerwise(power_budget: float,
                                        - cands[best][idx[best]][0])
         idx[best] += 1
 
-    # R-fill: hand the residual slack to every module as extra R at fixed
-    # b~x — consumes the budget exactly and only lowers the Eq.-18 MSE
-    slack_per_mac = (budget_total - total) / total_macs
-    chosen = {}
-    for i, m in enumerate(modules):
+    # R-fill: hand the residual slack to every PANN module as extra R at
+    # fixed b~x — consumes the budget exactly and only lowers the Eq.-18
+    # MSE. Cache modules sit on an integer ladder with no R axis, so they
+    # keep their level and the slack goes to the PANN side.
+    pann_macs = sum(m.macs for m, c in zip(modules, is_cache) if not c)
+    slack_per_mac = (budget_total - total) / max(pann_macs, 1e-30)
+    overrides = {}
+    for i, (m, c) in enumerate(zip(modules, is_cache)):
         p, b, r, _ = cands[i][idx[i]]
+        if c:
+            overrides[m.path] = pol.cache_module_quant(b)
+            continue
         p_eff = p + slack_per_mac
-        chosen[m.path] = (p_eff, b, pw.pann_r_for_budget(p_eff, b))
+        overrides[m.path] = pol.pann_module_quant(
+            pw.pann_r_for_budget(p_eff, b), b, m.fan_in)
 
     tree = pol.policy_tree(
         pol.pann_module_quant(uni.r, uni.b_x_tilde,
                               max(m.fan_in for m in modules)),
-        {m.path: pol.pann_module_quant(r, b, m.fan_in)
-         for m, (p_eff, b, r) in
-         ((m, chosen[m.path]) for m in modules)})
+        overrides)
 
     score = pol.tree_theory_score(modules, tree)
     uniform_score = pol.tree_theory_score(modules, uniform_tree)

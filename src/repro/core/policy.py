@@ -32,6 +32,9 @@ and ``models/serving.py``):
   rwkv.tm.wr rwkv.tm.wk rwkv.tm.wv rwkv.tm.wg rwkv.tm.decay_a
   rwkv.tm.decay_b rwkv.tm.wo rwkv.cm.wk rwkv.cm.wv
   lm_head
+  attn.k_cache attn.v_cache                  (decode-time KV cache codes;
+                                              mode="ruq_unsigned", b_x = the
+                                              cache bits — see CACHE_PATHS)
 
 The power/score accounting at the bottom consumes the per-module MAC
 profile from ``core/costs.py`` (duck-typed: anything with .path / .macs /
@@ -202,6 +205,34 @@ def serving_path(trail: Sequence[str]) -> str:
 
 ACT_PATH = "attn.act"   # breakdown key for act x act MACs (QK^T, PV)
 
+# Cache roles: the two act x act operand streams of decode attention. An
+# EXPLICIT override on either role (not a prefix fallback from "attn") means
+# the tree prices the cache at its own width; otherwise the legacy ACT_PATH
+# lump applies. Cache points are unsigned codes, so mode="ruq_unsigned" with
+# b_w = b_x = the cache bits is the canonical ModuleQuant.
+CACHE_PATHS = ("attn.k_cache", "attn.v_cache")
+
+
+def cache_module_quant(bits: int) -> ModuleQuant:
+    """The canonical operating point of a ``bits``-bit quantized KV cache."""
+    b = int(bits)
+    return ModuleQuant(mode="ruq_unsigned", b_w=b, b_x=b, b_x_tilde=b)
+
+
+def tree_cache_bits(tree: PolicyTree) -> dict:
+    """{cache role: bits} for the roles the tree EXPLICITLY overrides.
+
+    Prefix fallback is deliberately not consulted: an "attn" override is a
+    weight-projection point, not an opt-in to cache quantization.
+    """
+    table = dict(tree.overrides)
+    out = {}
+    for role in CACHE_PATHS:
+        mq = table.get(role)
+        if mq is not None and mq.mode != "none":
+            out[role] = max(mq.b_w, mq.b_x)
+    return out
+
 
 def tree_power_per_token(profile: Iterable, tree: PolicyTree,
                          act_macs: float = 0.0) -> Tuple[float, dict]:
@@ -210,16 +241,29 @@ def tree_power_per_token(profile: Iterable, tree: PolicyTree,
     Weight modules are priced at their own operating point; act x act MACs
     (outside PANN's scope, DESIGN.md §4) are charged as unsigned MACs at the
     default policy's activation width, mirroring
-    ``power.network_power_bitflips(scheme="pann")``.
+    ``power.network_power_bitflips(scheme="pann")``. When the tree carries
+    explicit cache-role overrides (CACHE_PATHS), the act x act MACs split in
+    half per role — QK^T reads the K cache, PV reads the V cache — and each
+    half is priced at its role's own width instead of the default lump.
     """
     breakdown: dict[str, float] = {}
     for m in profile:
+        if m.path in CACHE_PATHS:
+            continue               # cache roles are priced off act_macs below
         mq = tree.lookup(m.path)
         breakdown[m.path] = m.macs * mq.power_per_mac()
     if act_macs:
-        d = tree.default
-        b_act = d.b_x_tilde if d.mode == "pann" else d.b_x
-        breakdown[ACT_PATH] = act_macs * pw.p_mac_unsigned(b_act)
+        cache = tree_cache_bits(tree)
+        if cache:
+            d = tree.default
+            b_act = d.b_x_tilde if d.mode == "pann" else d.b_x
+            for role in CACHE_PATHS:
+                b = cache.get(role, b_act)
+                breakdown[role] = 0.5 * act_macs * pw.p_mac_unsigned(b)
+        else:
+            d = tree.default
+            b_act = d.b_x_tilde if d.mode == "pann" else d.b_x
+            breakdown[ACT_PATH] = act_macs * pw.p_mac_unsigned(b_act)
     return sum(breakdown.values()), breakdown
 
 

@@ -65,8 +65,10 @@ from repro.core import quant
 from repro.core.pann import bitplane_decompose
 from repro.kernels import autotune
 from repro.kernels import ops
+from repro.kernels import pann_attention as _pa
 from repro.kernels import pann_matmul as _pm
 from repro.kernels import pann_matmul_packed as _pk
+from repro.kernels import ref as _ref
 
 Array = jax.Array
 
@@ -306,6 +308,50 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
             quant.affine_encode(xf, s, z, n_lvl).astype(jnp.int8))
         y = _matmul_ref(q8, w_q, s, gamma, zcol)
     return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+def decode_attention(q: Array, kv, backend, *, num_kv_heads: int,
+                     window=None, softcap: float = 0.0) -> Array:
+    """Decode attention over a quantized KV cache — the attention analogue
+    of ``serving_linear``, one dispatch point for every backend.
+
+    ``q``: (B, H, hd) fp queries of the current token (RoPE applied).
+    ``kv``: a quantized cache, duck-typed — any object with ``k_planes`` /
+    ``v_planes`` (B, P, S, K, hd//8) uint8, ``k_s``/``k_z``/``v_s``/``v_z``
+    (B, S) f32 and scalar ``length`` (``models.attention.QuantKVCache``; no
+    models import here, same reason serving_linear takes a plain dict).
+
+    Queries are affine-quantized per-tensor at the kernels' half-range
+    ceiling (q is transient — the cache codes are the power knob, DESIGN.md
+    §10), with the same sealed-scalar discipline as ``serving_linear`` so
+    'ref' and a ':force'd Pallas run consume identical codes. Backend
+    fallback mirrors ``resolve_backend``: 'fused'/'packed' both name the
+    one bit-plane attention kernel and degrade to the jnp oracle off-TPU
+    unless forced.
+    """
+    name, force = parse_backend(backend or "ref")
+    use_kernel = name != "ref" and (ops.on_tpu() or force)
+    b, h, hd = q.shape
+    g = h // num_kv_heads
+    # entry barrier + sealed quantizer scalars: the serving_linear contract
+    qf = jax.lax.optimization_barrier(
+        q.astype(jnp.float32).reshape(b, num_kv_heads, g, hd))
+    lo, hi = quant.act_range_bounds(qf, include_zero=True)
+    s_q, z_q = quant.affine_scale_zp(lo, hi, HALF_RANGE_LEVELS)
+    q_scale = s_q * jnp.float32(hd) ** -0.5   # fold the 1/sqrt(hd) in once
+    s_q, z_q, q_scale = jax.lax.optimization_barrier((s_q, z_q, q_scale))
+    qq = jax.lax.optimization_barrier(
+        quant.affine_encode(qf, s_q, z_q, HALF_RANGE_LEVELS)
+        .astype(jnp.int32))
+    args = (qq, z_q, q_scale, kv.k_planes, kv.k_s, kv.k_z,
+            kv.v_planes, kv.v_s, kv.v_z, kv.length)
+    if use_kernel:
+        out = _pa.decode_attention(*args, window=window, softcap=softcap,
+                                   interpret=not ops.on_tpu())
+    else:
+        out = _ref.decode_attention_ref(*args, window=window,
+                                        softcap=softcap)
+    return out.reshape(b, h, hd)
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pann as pann_core
+from repro.core import quant
 from repro.core.unsigned import unsigned_split
 from repro.kernels import pann_matmul as _pm
 from repro.kernels import quantize_act as _qa
@@ -108,20 +109,41 @@ def pann_pack_weights(w: Array, r: float, axis=0) -> dict:
 
 def pann_matmul(x: Array, packed: dict, act_bits: int = 8,
                 mode: str = "fused", interpret: bool | None = None) -> Array:
-    """End-to-end PANN linear: quantize activations (Pallas), bit-plane
-    matmul (Pallas), fused dequant. x: (M, K) float."""
+    """End-to-end PANN linear through the FUSED act-quant prologue: the
+    activations are affine-encoded inside ``pann_matmul_act`` against one
+    per-tensor (s, z) — no standalone ``quantize_act`` pass, the fp32
+    activations cross HBM once and the codes never do. The (s, z)
+    derivation and the int32 ``zcol`` zero-point row are the exact
+    ``kernels.dispatch`` serving conventions (``act_range_bounds`` with
+    include_zero + ``affine_scale_zp``; levels capped at 127 so codes fit
+    int8), so this path is the two-arg mirror of ``serving_linear`` and is
+    held to the same jnp affine oracle in tests/test_kernels.py.
+
+    x: (M, K) float; ``packed`` from ``pann_pack_weights``.
+    """
     interpret = (not on_tpu()) if interpret is None else interpret
-    x_q, s_x = quantize_act(x, bits=act_bits, interpret=interpret)
     planes_pos, planes_neg = packed["planes_pos"], packed["planes_neg"]
     gamma = packed["gamma"]
-    m, k = x_q.shape
-    _, _, n = planes_pos.shape
+    m, k = x.shape
+    p, _, n = planes_pos.shape
+    n_lvl = jnp.float32(min((1 << int(act_bits)) - 1, 127))
+    lo, hi = quant.act_range_bounds(x.astype(jnp.float32),
+                                    include_zero=True)
+    s, z = quant.affine_scale_zp(lo, hi, n_lvl)
+    # zero-point correction row: z * colsum(w_q), with w_q reconstructed
+    # from the signed plane split (pos - neg summed over plane weights)
+    shifts = (jnp.int32(1) << jnp.arange(p, dtype=jnp.int32))
+    w_q = jnp.sum((planes_pos.astype(jnp.int32)
+                   - planes_neg.astype(jnp.int32))
+                  * shifts[:, None, None], axis=0)
+    zcol = z.astype(jnp.int32) * jnp.sum(w_q, axis=0)
     bm, bn, bk = _pick_blocks(m, n, k)
-    xp = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm, 0), bk, 1)
     pp = _pad_to(_pad_to(planes_pos, bk, 1), bn, 2)
     pn = _pad_to(_pad_to(planes_neg, bk, 1), bn, 2)
-    sxp = _pad_to(s_x, bm, 0)
     gp = _pad_to(gamma, bn, 0)
-    y = _pm.pann_matmul(xp, pp, pn, sxp, gp, mode=mode,
-                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    zp = _pad_to(zcol, bn, 0)
+    qparams = jnp.stack([s, z, n_lvl]).reshape(1, 3).astype(jnp.float32)
+    y = _pm.pann_matmul_act(xp, pp, pn, qparams, gp, zp, mode=mode,
+                            bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y[:m, :n]

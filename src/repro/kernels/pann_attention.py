@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: one-token GQA decode attention read DIRECTLY off the
+packed bit-plane KV cache (docs/kv_cache.md; DESIGN.md §10).
+
+The cache stores K/V as unsigned affine codes, bit-plane-decomposed and
+packed 8 bits/byte along head_dim (``kernels.ref.pack_cache_codes`` — NOT
+the weight-plane ``pack_planes``, which packs along K). One grid cell per
+(batch, kv_head); each cell unpacks its (P, S, hd/8) plane panel in VMEM,
+runs the exact int32 QK^T with BOTH zero points corrected inside the
+accumulator (the serving_linear ``zcol`` convention, applied twice), the
+fp32 softmax epilogue in the oracle's exact op sequence, then re-quantizes
+the probabilities to a fixed 2^14 grid for an exact int32 PV pass —
+``sum_s p = 1`` bounds ``pq @ vq`` by ``127 * 2^14``, int32-safe for ANY
+sequence length. Bit-identical (fp32) to ``kernels.ref.decode_attention_ref``
+(tests/test_kv_cache_quant.py).
+
+Whole-S blocks: decode reads every cached position once per token, so the
+panel (7 planes x S x hd/8 bytes) must fit VMEM — ~57 KB at S=4096,
+hd=128. No K-grid accumulation loop is needed at these sizes; a
+sequence-blocked online-softmax variant is the follow-up if contexts
+outgrow VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import CACHE_PLANES, PROB_SCALE
+
+Array = jax.Array
+
+NEG_INF = -1e30     # matches models.attention.NEG_INF / ref._CACHE_NEG_INF
+
+
+def _unpack_panel(pk: Array) -> Array:
+    """(P, S, d8) uint8 packed planes -> (S, hd) int32 codes, in-VMEM.
+    Byte j, bit i -> element 8j+i; plane p -> bit p of the code — the exact
+    inverse of ``ref.pack_cache_codes``."""
+    p, s, d8 = pk.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 8), 3)
+    bits = (pk[..., None].astype(jnp.int32) >> shifts) & 1   # (P, S, d8, 8)
+    bits = bits.reshape(p, s, d8 * 8)
+    plane_w = jnp.left_shift(
+        jnp.int32(1), jax.lax.broadcasted_iota(jnp.int32, (p, 1, 1), 0))
+    return jnp.sum(bits * plane_w, axis=0)                   # (S, hd)
+
+
+def _decode_attention_kernel(qp_ref, pos_ref, q_ref, kp_ref, ks_ref, kz_ref,
+                             vp_ref, vs_ref, vz_ref, o_ref, *, hd: int,
+                             window, softcap: float, prob_scale: float):
+    """Grid = (B, K): one cell per (batch, kv_head)."""
+    qz = qp_ref[0, 0].astype(jnp.int32)
+    q_scale = qp_ref[0, 1]                      # s_q * hd**-0.5, sealed
+    pos = pos_ref[0, 0]
+
+    qq = q_ref[...][0, 0]                       # (G, hd) int32 affine codes
+    kq = _unpack_panel(kp_ref[...][0, :, :, 0, :])           # (S, hd) int32
+    s = kq.shape[0]
+
+    # exact int32 QK^T: (qq - z_q) . (kq - z_k) expanded inside the
+    # accumulator — codes <= 127 and hd <= 256 keep every term int32-safe
+    dots = jax.lax.dot_general(
+        qq.astype(jnp.int8), kq.astype(jnp.int8), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)       # (G, S)
+    colsum_k = jnp.sum(kq, axis=-1)             # (S,)
+    rowsum_q = jnp.sum(qq, axis=-1)             # (G,)
+    kz = jnp.round(kz_ref[...][0]).astype(jnp.int32)         # (S,)
+    i32 = (dots - qz * colsum_k[None, :] - kz[None, :] * rowsum_q[:, None]
+           + qz * kz[None, :] * hd)
+
+    # fp32 epilogue — the oracle's exact op sequence (ref.py): change both
+    # or neither, the parity suite holds them bit-identical
+    sc = (i32.astype(jnp.float32) * q_scale) * ks_ref[...][0][None, :]
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)
+    valid = k_pos <= pos
+    if window is not None:
+        valid &= (pos - k_pos) < window
+    sc = jnp.where(valid, sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    # exact int32 PV: rescale every position into the largest valid V scale,
+    # re-quantize the probabilities, subtract the V zero point in-accumulator
+    vq = _unpack_panel(vp_ref[...][0, :, :, 0, :])           # (S, hd) int32
+    vs = vs_ref[...][0]                                      # (S,)
+    sv_ref = jnp.maximum(jnp.max(jnp.where(valid[0], vs, 0.0)), 1e-12)
+    ratio = vs / sv_ref
+    pq = jnp.round(p * ratio[None, :] * prob_scale).astype(jnp.int32)
+    pv = jax.lax.dot_general(pq, vq, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)  # (G, hd)
+    vz = jnp.round(vz_ref[...][0]).astype(jnp.int32)
+    corr = jnp.sum(pq * vz[None, :], axis=-1)                # (G,)
+    scale = sv_ref / prob_scale
+    out = (pv - corr[:, None]).astype(jnp.float32) * scale
+    o_ref[...] = out.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def decode_attention(qq: Array, q_z: Array, q_scale: Array,
+                     k_planes: Array, k_s: Array, k_z: Array,
+                     v_planes: Array, v_s: Array, v_z: Array,
+                     pos: Array, *, window=None, softcap: float = 0.0,
+                     interpret: bool = True) -> Array:
+    """out[b, k, g, :] = softmax-attention of query group (b, k, g) over the
+    packed bit-plane KV cache. Argument shapes match
+    ``kernels.ref.decode_attention_ref`` exactly (its docstring is the
+    spec), except ``pos`` must be a scalar — the engine's caches share one
+    ``length`` across the batch.
+    """
+    b, kh, g, hd = qq.shape
+    _, n_planes, s, kh2, d8 = k_planes.shape
+    assert kh == kh2 and d8 * 8 == hd, (qq.shape, k_planes.shape)
+    assert v_planes.shape == k_planes.shape
+    assert n_planes <= CACHE_PLANES, n_planes
+    qp = jnp.stack([jnp.asarray(q_z, jnp.float32).reshape(()),
+                    jnp.asarray(q_scale, jnp.float32).reshape(())]
+                   ).reshape(1, 2)
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_decode_attention_kernel, hd=hd,
+                               window=window, softcap=softcap,
+                               prob_scale=PROB_SCALE)
+    plane_spec = pl.BlockSpec((1, n_planes, s, 1, d8),
+                              lambda bi, ki: (bi, 0, 0, ki, 0))
+    row_spec = pl.BlockSpec((1, s), lambda bi, ki: (bi, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # [q_z, q_scale]
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # pos
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
+            plane_spec, row_spec, row_spec,                  # K planes/s/z
+            plane_spec, row_spec, row_spec,                  # V planes/s/z
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(qp, pos2, qq.astype(jnp.int32), k_planes, k_s, k_z,
+      v_planes, v_s, v_z)

@@ -67,11 +67,16 @@ def serve_ladder(args) -> dict:
             return {key: jnp.asarray(fe)}
 
     max_len = args.prompt_len + args.gen
+    cache_bits = None
+    if args.cache_bits:
+        cache_bits = "auto" if args.cache_bits == "auto" \
+            else int(args.cache_bits)
     engine = ServeEngine(cfg, params, ladder_bits=ladder_bits,
                          max_batch=args.batch, max_len=max_len,
                          allocation=args.allocation,
                          backend=args.backend or None,
                          autotune=args.autotune,
+                         cache_bits=cache_bits,
                          frontend_kwargs_fn=fe_fn)
     engine.warmup()
     total_macs = sum(m.macs for m in engine.profile)
@@ -149,6 +154,16 @@ def main(argv=None) -> dict:
                          "persistent per-device cache, $REPRO_AUTOTUNE_CACHE "
                          "overrides the location). Off-TPU the VMEM "
                          "heuristic is recorded untimed. Ladder mode only.")
+    ap.add_argument("--cache_bits", default="",
+                    help="quantize the decode-time KV cache (ladder mode): "
+                         "an int in [2,7] pins every rung's cache width; "
+                         "'auto' lets each rung pick — uniform rungs cache "
+                         "at their own b~x, layerwise rungs let the "
+                         "allocator trade cache bits against weight bits "
+                         "under one budget. Decode attention then reads the "
+                         "packed bit-plane cache directly "
+                         "(kernels/pann_attention via --backend, jnp ref "
+                         "oracle otherwise). Empty = fp cache.")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")
@@ -165,6 +180,10 @@ def main(argv=None) -> dict:
         raise SystemExit(
             "--allocation layerwise requires --power_ladder (the "
             "single-point path has no per-module rungs)")
+    if args.cache_bits:
+        raise SystemExit(
+            "--cache_bits requires --power_ladder (the quantized KV cache "
+            "rides in the serve-engine variant cache)")
 
     cfg = configs.get_config(args.arch)
     if args.reduced:

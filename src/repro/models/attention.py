@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.dist import constrain as C
+from repro.kernels import dispatch as KD
+from repro.kernels import ref as KREF
 from repro.models import layers as L
 
 Array = jax.Array
@@ -61,6 +64,27 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
 class KVCache(NamedTuple):
     k: Array          # (B, S_max, K, hd)
     v: Array          # (B, S_max, K, hd)
+    length: Array     # () int32 — tokens currently cached
+
+
+class QuantKVCache(NamedTuple):
+    """Power-aware KV cache: K/V as packed bit-plane affine codes.
+
+    Codes are unsigned affine (``core.quant.affine_encode``), bit-plane
+    decomposed and packed 8/byte along head_dim (``kernels.ref.
+    pack_cache_codes``); the plane axis sits behind the batch/scan dims and
+    is pinned at ``kernels.ref.CACHE_PLANES`` whatever the rung's cache
+    bits, so every cache rung shares ONE pytree structure and one jitted
+    decode step (the ladder invariant). Quantizer (s, z) are per position —
+    dynamic ranges vary per token; frozen (calibrated) ranges broadcast one
+    scalar — with z integer-valued f32 (docs/kv_cache.md).
+    """
+    k_planes: Array   # (B, P, S_max, K, hd//8) uint8
+    v_planes: Array   # (B, P, S_max, K, hd//8) uint8
+    k_s: Array        # (B, S_max) f32 per-position K scales
+    k_z: Array        # (B, S_max) f32 per-position K zero points (integer)
+    v_s: Array        # (B, S_max) f32
+    v_z: Array        # (B, S_max) f32
     length: Array     # () int32 — tokens currently cached
 
 
@@ -182,6 +206,14 @@ def attend(x: Array, p: dict, cfg: ModelConfig, *,
     if use_rope and kv_src is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_src is None:
+        # observe the CACHE roles (post-RoPE K, V — exactly what decode
+        # writes) so serving can freeze the cache quantizer ranges from
+        # the same EMA calibration as the projection inputs
+        tap = L._active_tap()
+        if tap is not None:
+            tap.observe("attn.k_cache", k)
+            tap.observe("attn.v_cache", v)
     g = cfg.num_heads // cfg.num_kv_heads
     if g > 1:
         k = jnp.repeat(k, g, axis=2)
@@ -201,8 +233,22 @@ def attend(x: Array, p: dict, cfg: ModelConfig, *,
 # Decode (single token, KV cache)
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     hd = cfg.resolved_head_dim
+    if cfg.cache_bits:
+        # packed bit-plane cache (cfg-only knob, so params-free decode
+        # state init keeps working); all-zero planes/scales are inert —
+        # unwritten positions are masked off by ``length`` anyway
+        assert hd % 8 == 0, (
+            f"quantized KV cache packs 8 codes/byte along head_dim; "
+            f"head_dim={hd} is not a multiple of 8")
+        shape = (batch, KREF.CACHE_PLANES, max_len, cfg.num_kv_heads,
+                 hd // 8)
+        row = jnp.zeros((batch, max_len), jnp.float32)
+        return QuantKVCache(k_planes=jnp.zeros(shape, jnp.uint8),
+                            v_planes=jnp.zeros(shape, jnp.uint8),
+                            k_s=row, k_z=row, v_s=row, v_z=row,
+                            length=jnp.zeros((), jnp.int32))
     if cfg.kv_cache_dtype:
         dtype = jnp.dtype(cfg.kv_cache_dtype)
     shape = (batch, max_len, cfg.num_kv_heads, hd)
@@ -224,13 +270,17 @@ def decode_attend(x: Array, cache: KVCache, p: dict, cfg: ModelConfig, *,
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     pos = cache.length
-    s_max = cache.k.shape[1]
+    s_max = (cache.k_s if isinstance(cache, QuantKVCache)
+             else cache.k).shape[1]
     batch_ax, seq_ax = C.dp_model_plan(b, s_max)
     q, k_new, v_new = _project_qkv(x, x, p, cfg)
     if use_rope:
         posv = jnp.full((b, 1), pos, jnp.int32)
         q = apply_rope(q, posv, cfg.rope_theta)
         k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    if isinstance(cache, QuantKVCache):
+        return _decode_attend_quant(x, cache, p, cfg, q, k_new, v_new,
+                                    window=window, batch_ax=batch_ax)
     # masked (select) cache update: a dynamic_update_slice at a traced
     # position on the sharded seq dim triggers GSPMD's "involuntary full
     # rematerialization" — an all-gather of the WHOLE cache every step
@@ -263,6 +313,93 @@ def decode_attend(x: Array, cache: KVCache, p: dict, cfg: ModelConfig, *,
                            {0: batch_ax})
     y = L.project(out, p["wo"], cfg, "attn.wo")
     return y, KVCache(k=k, v=v, length=pos + 1)
+
+
+def _cache_rows(new: Array, s_leaf, z_leaf, n_lvl) -> tuple[Array, Array]:
+    """The per-batch cache quantizer (s, z) of one new K or V token
+    (B, 1, K, hd). Frozen calibration (artifact leaves hoisted by
+    ``models/serving`` with the IDENTICAL ``affine_scale_zp`` op sequence)
+    broadcasts one scalar; otherwise the dynamic per-batch extremes,
+    zero-extended — the ``act_range_bounds(include_zero=True)`` convention
+    that bounds z to [0, n] (the kernels' int32-safety requirement)."""
+    b = new.shape[0]
+    if s_leaf is not None:
+        s = jnp.broadcast_to(jnp.asarray(s_leaf, jnp.float32).reshape(()),
+                             (b,))
+        z = jnp.broadcast_to(jnp.asarray(z_leaf, jnp.float32).reshape(()),
+                             (b,))
+        return s, z
+    xf = new.astype(jnp.float32)
+    lo = jnp.minimum(jnp.min(xf, axis=(1, 2, 3)), 0.0)
+    hi = jnp.maximum(jnp.max(xf, axis=(1, 2, 3)), 0.0)
+    return quant.affine_scale_zp(lo, hi, n_lvl)
+
+
+def _cache_write(planes: Array, s_row: Array, z_row: Array, new: Array,
+                 s: Array, z: Array, n_lvl, pos: Array):
+    """Encode one token and select-write its packed planes + quantizer row
+    at ``pos`` (masked select, not dynamic_update_slice — same GSPMD
+    rationale as the fp cache write above)."""
+    s_max = s_row.shape[1]
+    codes = quant.affine_encode(new.astype(jnp.float32),
+                                s[:, None, None, None],
+                                z[:, None, None, None], n_lvl)
+    codes = codes[:, 0].astype(jnp.int32)                  # (B, K, hd)
+    tok = jnp.moveaxis(KREF.pack_cache_codes(codes), 0, 1)  # (B, P, K, d8)
+    sel = jnp.arange(s_max) == pos
+    planes = jnp.where(sel[None, None, :, None, None],
+                       tok[:, :, None, :, :], planes)
+    s_row = jnp.where(sel[None, :], s[:, None], s_row)
+    z_row = jnp.where(sel[None, :], z[:, None], z_row)
+    return planes, s_row, z_row
+
+
+def _decode_attend_quant(x: Array, cache: QuantKVCache, p: dict,
+                         cfg: ModelConfig, q: Array, k_new: Array,
+                         v_new: Array, *, window: Optional[int],
+                         batch_ax) -> tuple[Array, QuantKVCache]:
+    """The quantized-cache decode step: encode-write this token's K/V at
+    the rung's cache bits, then attend THROUGH the packed planes via
+    ``kernels.dispatch.decode_attention`` (Pallas bit-plane kernel on TPU,
+    its bit-identical jnp oracle elsewhere).
+
+    Cache bits arrive as DATA leaves (``p["kv_cache"]["k_nlvl"]``/
+    ``v_nlvl``, built per rung by ``models/serving``) so mixed cache-rung
+    ladders share one compilation; raw params fall back to the static
+    ``cfg.cache_bits``. Frozen ranges ride as hoisted ``k_s``/``k_z``/
+    ``v_s``/``v_z`` scalar leaves next to them.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = cache.length
+    kc = p.get("kv_cache", {}) if hasattr(p, "get") else {}
+
+    def nlvl(leaf):
+        if leaf is not None:
+            return jnp.asarray(leaf, jnp.float32).reshape(())
+        bits = int(cfg.cache_bits or 8)
+        return jnp.float32(min((1 << bits) - 1, 127))
+
+    k_nlvl = nlvl(kc.get("k_nlvl"))
+    v_nlvl = nlvl(kc.get("v_nlvl"))
+    ks, kz = _cache_rows(k_new, kc.get("k_s"), kc.get("k_z"), k_nlvl)
+    vs, vz = _cache_rows(v_new, kc.get("v_s"), kc.get("v_z"), v_nlvl)
+    kp, ks_row, kz_row = _cache_write(cache.k_planes, cache.k_s, cache.k_z,
+                                      k_new, ks, kz, k_nlvl, pos)
+    vp, vs_row, vz_row = _cache_write(cache.v_planes, cache.v_s, cache.v_z,
+                                      v_new, vs, vz, v_nlvl, pos)
+    kp = C.constrain_spec(kp, {0: batch_ax})
+    vp = C.constrain_spec(vp, {0: batch_ax})
+    view = QuantKVCache(k_planes=kp, v_planes=vp, k_s=ks_row, k_z=kz_row,
+                        v_s=vs_row, v_z=vz_row, length=pos)
+    out = KD.decode_attention(q.reshape(b, cfg.num_heads, hd), view,
+                              cfg.kernel_backend or "ref",
+                              num_kv_heads=cfg.num_kv_heads, window=window,
+                              softcap=cfg.attn_softcap)
+    out = C.constrain_spec(out.astype(x.dtype).reshape(b, 1, -1),
+                           {0: batch_ax})
+    y = L.project(out, p["wo"], cfg, "attn.wo")
+    return y, view._replace(length=pos + 1)
 
 
 def cross_attend_cached(x: Array, enc_kv: tuple[Array, Array], p: dict,

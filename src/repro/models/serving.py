@@ -67,8 +67,8 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 store_dtype=jnp.int8,
                                 pack_planes: bool = False,
                                 plane_count: Optional[int] = None,
-                                calib: Optional[Mapping[str, Any]] = None
-                                ) -> Any:
+                                calib: Optional[Mapping[str, Any]] = None,
+                                cache_bits: Optional[int] = None) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
     embedding gather table stay in floating point (documented).
@@ -105,7 +105,18 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     of the per-batch dynamic range — the train→serve closing move. Roles
     the training run never observed (lo > hi) stay dynamic. Requires an
     activation bit width (``act_bits`` or a ``policy``) so ``act_n`` is
-    materialized alongside."""
+    materialized alongside.
+
+    ``cache_bits`` — or a ``policy`` with EXPLICIT cache-role overrides
+    (``policy.CACHE_PATHS``; prefix fallback from "attn" is deliberately
+    NOT an opt-in) — attaches a ``kv_cache`` artifact dict under every
+    self-attention parent: per-role ``k_nlvl``/``v_nlvl`` DATA leaves (the
+    rung's cache level counts, stack-shaped like ``act_n`` so scan bodies
+    slice them) plus, when ``calib`` saw the cache roles, frozen quantizer
+    scalars ``k_s``/``k_z``/``v_s``/``v_z`` hoisted with the identical
+    ``affine_scale_zp`` op sequence the decode step would run. ``xattn``
+    parents are skipped: cross-attention K/V are precomputed fp encoder
+    projections, not a decode-time cache."""
     if policy is None:
         r = r if r is not None else cfg.quant.r
     if calib:
@@ -114,6 +125,30 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                 "freezing calibrated ranges needs an activation bit width: "
                 "pass act_bits= or a policy= tree")
         calib = {k: np.asarray(v, np.float32) for k, v in calib.items()}
+
+    cache_role_bits = None
+    policy_cache = pol.tree_cache_bits(policy) if policy is not None else {}
+    if policy_cache or cache_bits is not None:
+        default_b = cache_bits if cache_bits is not None else max(
+            policy_cache.values())
+        cache_role_bits = {
+            role: int(policy_cache.get(role, default_b))
+            for role in pol.CACHE_PATHS}
+
+    def cache_artifact(stack) -> dict:
+        out = {}
+        for role, prefix in zip(pol.CACHE_PATHS, ("k", "v")):
+            n_lvl = float(min((1 << cache_role_bits[role]) - 1, 127))
+            out[f"{prefix}_nlvl"] = jnp.full(stack, n_lvl, jnp.float32)
+            rng = calib.get(role) if calib else None
+            if rng is not None and float(rng[0]) <= float(rng[1]):
+                lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
+                hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
+                s, z = quant_core.affine_scale_zp(lo, hi,
+                                                  jnp.float32(n_lvl))
+                out[f"{prefix}_s"] = jnp.full(stack, s, jnp.float32)
+                out[f"{prefix}_z"] = jnp.full(stack, z, jnp.float32)
+        return out
 
     def walk(node, trail=()):
         if isinstance(node, dict):
@@ -179,7 +214,12 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                 if "b" in node:
                     out["b"] = node["b"]
                 return out
-            return {k: walk(v, trail + (k,)) for k, v in node.items()}
+            out = {k: walk(v, trail + (k,)) for k, v in node.items()}
+            if (cache_role_bits is not None
+                    and name in ("attn", "shared_attn") and "wk" in node
+                    and isinstance(node["wk"], dict) and "w" in node["wk"]):
+                out["kv_cache"] = cache_artifact(node["wk"]["w"].shape[:-2])
+            return out
         if isinstance(node, list):
             return [walk(v, trail) for v in node]
         if isinstance(node, tuple):
@@ -210,7 +250,8 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
                         store_dtype=jnp.int8,
                         pack_planes: bool = False,
                         plane_count: Optional[int] = None,
-                        calib: Optional[Mapping[str, Any]] = None) -> dict:
+                        calib: Optional[Mapping[str, Any]] = None,
+                        cache_bits: Any = None) -> dict:
     """Materialize one int8 weight-code variant per operating point.
 
     ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
@@ -233,7 +274,21 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     not avals, calibrated and uncalibrated rungs still share one compiled
     decode step — but every rung in ONE cache must agree on which roles are
     calibrated (same leaf set), which passing one collection guarantees.
+
+    ``cache_bits`` quantizes the decode-time KV cache per rung: an int
+    applies to every rung, a mapping (rung key -> bits) gives each rung its
+    own cache width — still one compiled step, because the width rides in
+    the ``k_nlvl``/``v_nlvl`` DATA leaves. All-or-none across rungs (a rung
+    without cache leaves would change the pytree structure); PolicyTree
+    rungs may instead carry explicit cache-role overrides.
     """
+    if isinstance(cache_bits, Mapping):
+        missing = set(r_by_rung) - set(cache_bits)
+        if missing:
+            raise ValueError(
+                f"cache_bits mapping must cover every rung (missing "
+                f"{sorted(missing)}): rungs with and without kv_cache "
+                "leaves cannot share one pytree structure")
     if pack_planes and plane_count is None and len(r_by_rung) > 1:
         raise ValueError(
             "pack_planes over multiple rungs needs a pinned plane_count "
@@ -243,8 +298,11 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     cache = {}
     shardings = None
     for key, spec in r_by_rung.items():
+        cb = (cache_bits.get(key) if isinstance(cache_bits, Mapping)
+              else cache_bits)
         kw = dict(store_dtype=store_dtype, pack_planes=pack_planes,
-                  plane_count=plane_count, calib=calib)
+                  plane_count=plane_count, calib=calib,
+                  cache_bits=None if cb is None else int(cb))
         if isinstance(spec, pol.PolicyTree):
             v = quantize_params_for_serving(params, cfg, policy=spec, **kw)
         else:

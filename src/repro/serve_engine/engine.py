@@ -54,11 +54,30 @@ class ServeEngine:
                  allocation: str = "uniform",
                  backend: Optional[str] = None,
                  autotune: bool = False,
+                 cache_bits: Any = None,
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
                 f"{cfg.family} decode needs a frontend; pass "
                 "frontend_kwargs_fn(batch) -> init_decode_state kwargs")
+        # quantized KV cache (docs/kv_cache.md): None leaves the fp cache;
+        # an int pins every rung's cache width; "auto" lets each rung pick —
+        # a uniform rung caches at its own b~x, a layerwise rung lets the
+        # allocator trade cache bits against weight bits under one budget
+        # (cache pseudo-modules appended to its profile). Trace-time static
+        # on the config like the backend: the cache STRUCTURE is fixed,
+        # per-rung widths ride in the variants as data (k_nlvl / v_nlvl),
+        # so one compiled decode step still serves the whole ladder.
+        if cache_bits is not None and cache_bits != "auto":
+            cache_bits = int(cache_bits)
+            if not 2 <= cache_bits <= 7:
+                raise ValueError(
+                    f"cache_bits must be in [2, 7] (codes are <= 7 planes), "
+                    f"got {cache_bits}")
+        self.cache_bits = cache_bits
+        if cache_bits is not None:
+            cfg = dataclasses.replace(
+                cfg, cache_bits=7 if cache_bits == "auto" else cache_bits)
         # the serving-matmul backend (repro.kernels.dispatch) is trace-time
         # static on the config: ONE jitted decode step per backend, still
         # one per ENGINE — every rung of this ladder shares it
@@ -73,11 +92,29 @@ class ServeEngine:
         # the per-module MAC profile: feeds the layerwise allocator AND the
         # per-module energy breakdown on every response (either allocation)
         self.profile = costs.module_cost_profile(cfg)
+        # "auto" + layerwise: the allocator sees the cache roles as
+        # pseudo-modules and spends ONE budget across weights AND cache
+        alloc_profile = self.profile
+        if cache_bits == "auto" and allocation == "layerwise":
+            alloc_profile = self.profile + costs.cache_cost_modules(cfg)
         self.ladder = build_ladder(ladder_bits,
                                    d=float(mse_dim or cfg.d_model),
                                    allocation=allocation,
-                                   profile=self.profile)
+                                   profile=alloc_profile)
         self.rungs = {op.bits: op for op in self.ladder}
+        # per-rung cache width handed to the variant cache: an int pins the
+        # rung's k_nlvl/v_nlvl leaves; None defers to the rung's PolicyTree
+        # cache-role overrides (quantize_params_for_serving reads those)
+        self._cache_bits_by_rung: dict[int, Optional[int]] = {}
+        if cache_bits is not None:
+            for op in self.ladder:
+                if cache_bits != "auto":
+                    self._cache_bits_by_rung[op.bits] = cache_bits
+                elif op.tree is not None and pol.tree_cache_bits(op.tree):
+                    self._cache_bits_by_rung[op.bits] = None
+                else:
+                    self._cache_bits_by_rung[op.bits] = min(
+                        int(op.b_x_tilde), 7)
         # the variant cache: int8 weight codes per rung, activations
         # quantized at the rung's b~x (stored as data so rungs share one
         # compilation), sharded like training params on a mesh; a layerwise
@@ -96,7 +133,8 @@ class ServeEngine:
                        else (op.r, op.b_x_tilde))
              for op in self.ladder}, mesh=mesh, par=par,
             pack_planes=needs_planes,
-            plane_count=serving.LADDER_PLANE_COUNT if needs_planes else None)
+            plane_count=serving.LADDER_PLANE_COUNT if needs_planes else None,
+            cache_bits=self._cache_bits_by_rung or None)
         # offline block autotuning (kernels/autotune): measure-and-cache the
         # best Pallas block shapes per projection BEFORE the decode step is
         # ever traced — serving_linear then reads the cache at trace time,
@@ -237,11 +275,23 @@ class ServeEngine:
 
     def _rung_tree(self, rung) -> pol.PolicyTree:
         """The rung's PolicyTree: its layerwise tree, or the uniform lift
-        of its single (b~x, R) point — one pricing path for both."""
+        of its single (b~x, R) point — one pricing path for both. With a
+        quantized cache the tree additionally carries EXPLICIT cache-role
+        overrides at the rung's resolved width, so
+        ``policy.tree_power_per_token`` prices the act x act MACs at the
+        cache's own bits (the per-response cache bit-flip line items)."""
         if rung.tree is not None:
-            return rung.tree
-        return pol.uniform_policy(pol.ModuleQuant(
-            mode="pann", r=rung.r, b_x_tilde=rung.b_x_tilde))
+            tree = rung.tree
+        else:
+            tree = pol.uniform_policy(pol.ModuleQuant(
+                mode="pann", r=rung.r, b_x_tilde=rung.b_x_tilde))
+        cb = self._cache_bits_by_rung.get(rung.bits)
+        if cb is None:          # cache off, or policy-driven (tree has them)
+            return tree
+        ov = dict(tree.overrides)
+        for role in pol.CACHE_PATHS:
+            ov[role] = pol.cache_module_quant(cb)
+        return pol.policy_tree(tree.default, ov)
 
     def _ledger_for(self, rung, ctx: int) -> pw.EnergyLedger:
         macs = self._macs_by_ctx.get(ctx)
@@ -250,9 +300,11 @@ class ServeEngine:
                 ctx, costs.macs_per_token(self.cfg, context_len=ctx))
         total, breakdown = pol.tree_power_per_token(
             self.profile, self._rung_tree(rung), act_macs=macs.act_macs)
-        if rung.tree is None:
-            # uniform rung: keep the legacy headline number bit-for-bit
-            # (same formula; the breakdown is the itemization of it)
+        if rung.tree is None and self.cache_bits is None:
+            # uniform rung, fp cache: keep the legacy headline number
+            # bit-for-bit (same formula; the breakdown itemizes it). A
+            # quantized cache re-prices the act x act half, so the
+            # cache-aware total stands on its own there.
             total = pw.pann_token_bitflips(macs, rung.r, rung.b_x_tilde)
         return pw.EnergyLedger(total, breakdown_per_token=breakdown)
 
@@ -273,6 +325,9 @@ class ServeEngine:
                 "power_per_weight_mac": rung.power,
                 **ledger.report(),
             }
+            if self.cache_bits is not None:
+                meta["cache_bits"] = pol.tree_cache_bits(
+                    self._rung_tree(rung))
             out.append(Response(uid=req.uid, tokens=toks,
                                 rung_bits=rung.bits, metadata=meta))
         return out
@@ -371,6 +426,8 @@ class ServeEngine:
         return {
             "allocation": self.allocation,
             "backend": self.backend or "legacy",
+            "cache_bits": self.cache_bits,
+            "cache_bits_by_rung": dict(self._cache_bits_by_rung) or None,
             "ladder": [{"bits": op.bits, "b_x_tilde": op.b_x_tilde,
                         "r": round(op.r, 3),
                         "power_per_weight_mac": round(op.power, 2),

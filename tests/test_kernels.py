@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import pann as pann_core
+from repro.core import quant as quant_core
 from repro.core.unsigned import unsigned_split
 from repro.kernels import ops, ref
 from repro.kernels.pann_matmul import pann_matmul as pann_matmul_raw
@@ -118,20 +119,26 @@ def test_ops_unsigned_matmul_ragged(m, k, n):
 
 @pytest.mark.parametrize("m,k,n", [(64, 96, 80), (200, 256, 120)])
 def test_ops_pann_matmul_end_to_end(m, k, n):
-    """Kernel path == model-level bitplane linear (core.pann oracle)."""
+    """Fused-prologue path == the affine jnp oracle (dispatch conventions:
+    per-tensor include_zero (s, z), int32 zcol in the accumulator)."""
     w = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
     x = jnp.abs(jnp.asarray(RNG.standard_normal((m, k)), jnp.float32))
     r = 2.0
     packed = ops.pann_pack_weights(w, r, axis=0)
     got = ops.pann_matmul(x, packed, act_bits=8, interpret=True)
 
-    # oracle: integer-exact reference with the same per-row act quantization
-    x_q, s_x = ref.quantize_act_ref(x, bits=8)
+    # oracle: integer-exact affine reference, the identical (s, z) op
+    # sequence the fused kernel's in-VMEM encode uses
+    n_lvl = jnp.float32(min((1 << 8) - 1, 127))
+    lo, hi = quant_core.act_range_bounds(x, include_zero=True)
+    s, z = quant_core.affine_scale_zp(lo, hi, n_lvl)
+    q = quant_core.affine_encode(x, s, z, n_lvl).astype(jnp.int32)
     w_q, gamma = pann_core.pann_quantize(w, r, axis=0)
-    want = (jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
-            .astype(jnp.float32)) * s_x * gamma.reshape(1, -1)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
+    wq32 = w_q.astype(jnp.int32)
+    zcol = z.astype(jnp.int32) * jnp.sum(wq32, axis=0)
+    want = ((jnp.matmul(q, wq32) - zcol[None, :]).astype(jnp.float32)
+            * s * gamma.reshape(1, -1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     # and it approximates the fp32 product
     rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
     assert rel < 0.15

@@ -1,0 +1,94 @@
+"""Off-TPU validation of the roofline CI gate (benchmarks/roofline.py).
+
+The timing leg only runs on TPU, so the CPU CI legs would otherwise never
+exercise the threshold decision itself. Here the gate's pass/fail logic is
+driven with SYNTHETIC backend measurements (monkeypatched in place of the
+TPU timings) so a broken floor comparison — or a nonsense GATE_THRESHOLDS
+edit — fails immediately on CPU, not on the next TPU run.
+"""
+import math
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # for benchmarks.*
+
+from benchmarks import roofline  # noqa: E402
+from benchmarks.common import device_peaks  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
+
+
+def test_gate_thresholds_are_sane_floors():
+    assert set(roofline.GATE_THRESHOLDS) == {"fused", "packed"}
+    for backend, floor in roofline.GATE_THRESHOLDS.items():
+        assert 0.0 < floor < 1.0, (backend, floor)
+    # packed trades HBM bytes for VPU unpack work — its floor must sit
+    # below fused's, or the docs/kernels.md rationale is stale
+    assert roofline.GATE_THRESHOLDS["packed"] < roofline.GATE_THRESHOLDS["fused"]
+    m, k, n = roofline.GATE_SHAPE
+    assert m % 128 == 0 and k % 128 == 0 and n % 128 == 0
+
+
+def test_analyze_record_synthetic_math():
+    """The hand-checkable record from assert_invariants, verified term by
+    term against the peaks table rather than just for finiteness."""
+    pk = device_peaks("TPU v5e")
+    rec = {
+        "arch": "synthetic", "shape": "s", "mesh": "single", "n_devices": 4,
+        "flops_per_device_corrected": 1e12,
+        "bytes_per_device_corrected": 1e9,
+        "collective_bytes_corrected": 1e8,
+        "model_flops_global": 3e12,
+    }
+    a = roofline.analyze_record(rec)
+    assert math.isclose(a["t_compute_s"], 1e12 / pk["peak_flops"])
+    assert math.isclose(a["t_memory_s"], 1e9 / pk["hbm_bw"])
+    assert math.isclose(a["t_collective_s"], 1e8 / pk["ici_bw"])
+    assert a["dominant"] == "compute"
+    assert math.isclose(a["useful_ratio"], 0.75)
+    ideal = 3e12 / pk["peak_flops"] / 4
+    assert math.isclose(a["roofline_fraction"], ideal / a["t_compute_s"])
+    roofline.assert_invariants()  # and the bundled self-check still holds
+
+
+def _synthetic_measurements(fractions):
+    peaks = device_peaks()
+    return {
+        backend: {
+            "us": 100.0,
+            "achieved_int8_ops": frac * peaks["peak_int8"],
+            "fraction_of_peak": frac,
+        }
+        for backend, frac in fractions.items()
+    }
+
+
+def test_gate_passes_on_synthetic_measurements_above_floor(monkeypatch):
+    monkeypatch.setattr(kops, "on_tpu", lambda: True)
+    meas = _synthetic_measurements(
+        {b: f + 0.01 for b, f in roofline.GATE_THRESHOLDS.items()})
+    monkeypatch.setattr(roofline, "_gate_measurements", lambda: meas)
+    record = roofline.gate(check=True)
+    assert record["failures"] == []
+    assert record["measurements"] == meas
+
+
+@pytest.mark.parametrize("breached", ["fused", "packed"])
+def test_gate_fails_on_synthetic_measurement_below_floor(monkeypatch,
+                                                         breached):
+    monkeypatch.setattr(kops, "on_tpu", lambda: True)
+    fractions = {b: f + 0.01 for b, f in roofline.GATE_THRESHOLDS.items()}
+    fractions[breached] = roofline.GATE_THRESHOLDS[breached] - 0.01
+    monkeypatch.setattr(roofline, "_gate_measurements",
+                        lambda: _synthetic_measurements(fractions))
+    with pytest.raises(SystemExit):
+        roofline.gate(check=True)
+    # without --check semantics the breach is recorded, not raised
+    record = roofline.gate(check=False)
+    assert len(record["failures"]) == 1 and breached in record["failures"][0]
+
+
+def test_gate_off_tpu_skips_timing_but_asserts_invariants():
+    record = roofline.gate(check=True)  # CPU container: must not raise
+    assert "skipped" in record and record["failures"] == []
+    assert record["thresholds"] == roofline.GATE_THRESHOLDS

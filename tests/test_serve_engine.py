@@ -254,6 +254,54 @@ def test_midstream_switch_matches_fresh_server(setup, engine):
     engine.assert_no_recompile()
 
 
+def test_no_recompile_mixed_weight_and_cache_rungs(setup):
+    """ONE jitted decode step serves a mixed weight-rung x cache-rung
+    ladder: cache_bits='auto' gives every rung its own cache width
+    (k_nlvl/v_nlvl DATA leaves), and the packed-plane cache layout is
+    pinned at 7 planes — so serving traffic across all rungs must not add
+    a single compilation past warmup."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, ladder_bits=LADDER_BITS, max_batch=2,
+                      max_len=28, cache_bits="auto")
+    eng.warmup()
+    assert eng.compilations_after_warmup == 1
+    # the rungs really do carry DIFFERENT cache widths (mixed ladder)
+    assert len(set(eng._cache_bits_by_rung.values())) > 1
+    reqs = [Request(uid=i, prompt=_prompt(7), max_new_tokens=4,
+                    power_budget_bits=b) for i, b in enumerate(LADDER_BITS)]
+    resps = eng.generate(reqs)
+    eng.assert_no_recompile()
+    assert eng.rung_switches > 0
+    for r in resps:
+        cb = r.metadata["cache_bits"]
+        assert set(cb) == {"attn.k_cache", "attn.v_cache"}
+        # the response itemizes the cache's own bit-flip spend
+        assert r.metadata["per_module_gbitflips_per_token"][
+            "attn.k_cache"] > 0
+
+
+def test_midstream_switch_with_quantized_cache_matches_fresh_server(setup):
+    """The rung-switch replay contract survives cache quantization: a
+    switch re-encodes the prefix's cache codes from scratch at the target
+    rung's width, so the continuation is bit-identical to a fresh server
+    at that rung — quantized cache and all."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, ladder_bits=LADDER_BITS, max_batch=2,
+                      max_len=28, cache_bits="auto")
+    eng.warmup()
+    prompt = _prompt(8, n=8)
+    out = eng.decode_stream(prompt, [(2, 4), (6, 4)])
+    seg1, seg2 = out["segments"]
+
+    fresh = ServeEngine(cfg, params, ladder_bits=LADDER_BITS, max_batch=2,
+                        max_len=28, cache_bits="auto")
+    fresh.warmup()
+    prefix = np.concatenate([prompt, np.asarray(seg1["tokens"], np.int32)])
+    fresh_out = fresh.decode_stream(prefix, [(6, 4)])
+    assert fresh_out["tokens"] == seg2["tokens"]
+    eng.assert_no_recompile()
+
+
 def test_decode_stream_zero_length_segment(engine):
     prompt = _prompt(5, n=8)
     out = engine.decode_stream(prompt, [(2, 0), (6, 3)])
