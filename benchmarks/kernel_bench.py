@@ -34,6 +34,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
@@ -44,6 +45,7 @@ from repro.kernels import dispatch, ops, ref  # noqa: E402
 from repro.kernels import pann_matmul as _pm  # noqa: E402
 from repro.kernels.pann_matmul_packed import (pack_planes,  # noqa: E402
                                               pann_matmul_packed)
+from repro.models import serving  # noqa: E402
 from repro.models.serving import quantize_params_for_serving  # noqa: E402
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
@@ -136,6 +138,63 @@ def run(check: bool = False) -> dict:
                 np.asarray(dispatch.serving_linear(xs, leaf_cal, spec))
                 for spec in backends}
 
+    # --- the mmap-able weight store: zero-copy rung views ------------------
+    # one store quantized at the max rung budget, every rung a view
+    # (DESIGN.md §11). Byte accounting is pure shape math (deterministic,
+    # gated); view-vs-materialized parity rides in the parity section.
+    ws = serving.build_weight_store({"wq": {"w": w}}, cfg,
+                                    {2: (2.0, 8), 6: (16.0, 8)},
+                                    pack_planes=True)
+
+    def _naive_bytes(tree):
+        return sum(int(np.prod(lf.shape)) * lf.dtype.itemsize
+                   for lf in jax.tree_util.tree_leaves(tree)
+                   if hasattr(lf, "dtype"))
+
+    def _unique_bytes(*trees):
+        seen, total = set(), 0
+        for tree in trees:
+            for lf in jax.tree_util.tree_leaves(tree):
+                if hasattr(lf, "dtype") and id(lf) not in seen:
+                    seen.add(id(lf))
+                    total += int(np.prod(lf.shape)) * lf.dtype.itemsize
+        return total
+
+    store_b = _naive_bytes(ws.store)
+    unique_b = _unique_bytes(ws.store, *ws.views.values())
+    artifact_bytes = {
+        "rungs": sorted(ws.views),
+        "store_bytes": float(store_b),
+        # what actually lands in HBM: store + per-rung scalars/colsums
+        "unique_bytes_all_views": float(unique_b),
+        # what legacy per-rung materialization would cost for these rungs
+        "materialized_bytes_all_views": float(sum(
+            _naive_bytes(serving.materialize_view(v))
+            for v in ws.views.values())),
+        "per_rung_overhead_bytes": float(unique_b - store_b)
+        / max(len(ws.views), 1),
+    }
+
+    disp_view = {}
+    for rung, view in sorted(ws.views.items()):
+        mat = serving.materialize_view(view)
+        for spec in backends:
+            name = spec.split(":")[0]
+            disp_view[f"dispatch_view{rung}_vs_materialized_{name}"] = _exact(
+                dispatch.serving_linear(xs, view["wq"], spec),
+                dispatch.serving_linear(xs, mat["wq"], spec))
+            if name == "ref":
+                continue
+            # the plane-skip latency claim: the narrow rung predicates the
+            # dead planes' DMA + MXU passes off, so view2 should beat
+            # view6 on TPU (advisory via the trajectory, like all timings)
+            us = time_call(lambda v=view, spec=spec: dispatch.serving_linear(
+                xs, v["wq"], spec))
+            timings[f"dispatch_view{rung}_{name}"] = us
+            emit(f"kernel_dispatch_view{rung}_{name}", us,
+                 "rung view (plane skip)" if rung < max(ws.views)
+                 else "top rung view (no skip)")
+
     # --- the gated invariants ----------------------------------------------
     y_oracle = ref.pann_matmul_ref(x_q2, packed["planes_pos"],
                                    packed["planes_neg"], s_x,
@@ -171,7 +230,9 @@ def run(check: bool = False) -> dict:
             "fused_prologue": float(4 * m * k),
             "saved_per_projection": float(2 * m * k),
         },
+        "artifact_bytes": artifact_bytes,
         "parity": {
+            **disp_view,
             "kernel_fused_vs_oracle": _exact(y_kernel_fused, y_oracle),
             "kernel_planes_vs_oracle": _exact(y_kernel_planes, y_oracle),
             "kernel_packed_vs_oracle": _exact(y_kernel_packed, y_oracle),
@@ -217,7 +278,8 @@ def check_baseline(result: dict, baseline_path: str = BASELINE) -> list[str]:
     sections = ["shape", "hbm_bytes_per_weight"]
     # newer sections gate only once both sides carry them, so a refreshed
     # bench still checks cleanly against an older committed baseline
-    sections += [s for s in ("act_hbm_bytes",) if s in inv and s in base]
+    sections += [s for s in ("act_hbm_bytes", "artifact_bytes")
+                 if s in inv and s in base]
     for section in sections:
         if inv[section] != base[section]:
             failures.append(

@@ -13,6 +13,12 @@ Two instruments:
     (benchmarks/baselines/footprint.json) must be matched within tolerance
     AND the 4-bit budget must keep a >= 2x combined weight+cache reduction
     (docs/kv_cache.md; the PR-7 acceptance floor).
+  * ``measure_ladder_depth()`` — the LADDER-DEPTH gate (DESIGN.md §11):
+    unique weight-store bytes for a 2-rung vs 5-rung ladder under the
+    zero-copy 'views' materialization must stay flat (<= 1.10x; deeper
+    ladders add only per-rung scalars) while the legacy per-rung
+    quantizer shows its near-linear growth. Baseline-free hard invariant,
+    also asserted by ``--check``.
 
 Refresh the baseline by copying benchmarks/results/footprint.json over
 benchmarks/baselines/footprint.json when the reduced config or the artifact
@@ -159,6 +165,103 @@ def measure_footprint(arch: str = "llama3-8b", budgets=(2, 4, 6),
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Ladder-depth gate: weight-store HBM must not scale with rung count
+# ---------------------------------------------------------------------------
+
+# views: deeper ladders add only per-rung scalars + w_colsum rows
+# (manifest-level overhead) on top of ONE shared max-budget store. On the
+# reduced CI shapes a colsum row (n f32) is a visible fraction of a k x n
+# int8 store, so "flat" is ~1.04x for 2 -> 5 rungs here; at real model
+# shapes (k >= 4096) the same overhead is < 1%. The floor guards the
+# failure mode that matters — any per-rung copy of a BIG leaf (codes or
+# planes) blows straight past 1.10x toward legacy's ~2.5x.
+LADDER_FLAT_TOLERANCE = 1.10
+# legacy materializes a full artifact per rung; 2 -> 5 rungs must show the
+# near-linear growth the views path exists to kill (sub-2.5x only because
+# narrow rungs pack fewer planes)
+LEGACY_MIN_GROWTH = 1.8
+
+
+def _unique_leaf_bytes(*trees) -> int:
+    """Byte count deduplicated by array identity: zero-copy rung views
+    reference the store's big leaves by the SAME object, and counting
+    them once per view would report the HBM scaling the artifact was
+    built to avoid."""
+    seen, total = set(), 0
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if not hasattr(leaf, "dtype") or id(leaf) in seen:
+                continue
+            seen.add(id(leaf))
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def measure_ladder_depth(arch: str = "llama3-8b", shallow=(2, 4),
+                         deep=(2, 3, 4, 5, 6), seed: int = 0) -> dict:
+    """Unique weight-store bytes for a shallow vs deep ladder, under both
+    materializations (DESIGN.md §11): 'views' quantizes once at the
+    per-module max budget and serves rungs as zero-copy views; 'legacy'
+    runs the per-rung quantizer and pays for every rung."""
+    cfg = configs.reduced(configs.get_config(arch))
+    cfg = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+    params = MD.init_params(jax.random.PRNGKey(seed), cfg)
+
+    def plans(bits_list):
+        return {int(b): planner.plan_with_theory(planner.budget_from_bits(
+            int(b))) for b in bits_list}
+
+    def views_bytes(bits_list):
+        specs = {b: (p.r, p.b_x_tilde) for b, p in plans(bits_list).items()}
+        ws = serving.build_weight_store(params, cfg, specs,
+                                        pack_planes=True)
+        return _unique_leaf_bytes(ws.store, *ws.views.values())
+
+    def legacy_bytes(bits_list):
+        return sum(
+            _unique_leaf_bytes(serving.quantize_params_for_serving(
+                params, cfg, r=p.r, act_bits=p.b_x_tilde, pack_planes=True))
+            for p in plans(bits_list).values())
+
+    row = {
+        "shallow_rungs": sorted(int(b) for b in shallow),
+        "deep_rungs": sorted(int(b) for b in deep),
+        "views_bytes_shallow": views_bytes(shallow),
+        "views_bytes_deep": views_bytes(deep),
+        "legacy_bytes_shallow": legacy_bytes(shallow),
+        "legacy_bytes_deep": legacy_bytes(deep),
+    }
+    row["views_growth"] = round(
+        row["views_bytes_deep"] / max(row["views_bytes_shallow"], 1), 3)
+    row["legacy_growth"] = round(
+        row["legacy_bytes_deep"] / max(row["legacy_bytes_shallow"], 1), 3)
+    return row
+
+
+def check_ladder_depth(row: dict) -> list[str]:
+    """Hard invariants, deliberately baseline-free: flatness is a property
+    of the artifact design, not of any particular committed snapshot."""
+    failures = []
+    n_sh, n_dp = len(row["shallow_rungs"]), len(row["deep_rungs"])
+    if row["views_growth"] > LADDER_FLAT_TOLERANCE:
+        failures.append(
+            f"views weight store grew {row['views_growth']:.3f}x going "
+            f"{n_sh} -> {n_dp} rungs (flat floor {LADDER_FLAT_TOLERANCE}x)"
+            f" — rung views are no longer zero-copy over one store")
+    if row["legacy_growth"] < LEGACY_MIN_GROWTH:
+        failures.append(
+            f"legacy per-rung growth {row['legacy_growth']:.2f}x < "
+            f"{LEGACY_MIN_GROWTH}x going {n_sh} -> {n_dp} rungs — the "
+            f"legacy measurement no longer materializes per rung, so the "
+            f"views comparison is vacuous")
+    if row["views_bytes_deep"] >= row["legacy_bytes_deep"]:
+        failures.append(
+            f"deep ladder: views store ({row['views_bytes_deep']} B) is "
+            f"not smaller than legacy ({row['legacy_bytes_deep']} B)")
+    return failures
+
+
 def check_footprint(rows: list[dict], baseline_path: str = BASELINE
                     ) -> list[str]:
     """The gate: baseline match within tolerance + the 4-bit hard floor."""
@@ -215,6 +318,7 @@ def main(argv=None) -> dict:
         "arch": args.arch,
         "table": None if args.reduced else run(steps=args.steps),
         "footprint": measure_footprint(args.arch, budgets),
+        "ladder_depth": measure_ladder_depth(args.arch),
     }
     save_json("footprint.json", result)
     at4 = next((r for r in result["footprint"] if r["power_bits"] == 4),
@@ -223,8 +327,13 @@ def main(argv=None) -> dict:
          f"{at4['power_bits']}-bit budget: weights "
          f"x{at4['weight_reduction']} cache x{at4['cache_reduction']} "
          f"combined x{at4['combined_reduction']}")
+    ld = result["ladder_depth"]
+    print(f"[footprint] ladder depth {len(ld['shallow_rungs'])} -> "
+          f"{len(ld['deep_rungs'])} rungs: views x{ld['views_growth']} "
+          f"(flat), legacy x{ld['legacy_growth']}")
     if args.check:
         failures = check_footprint(result["footprint"])
+        failures += check_ladder_depth(result["ladder_depth"])
         if failures:
             for f in failures:
                 print(f"[footprint] REGRESSION: {f}")

@@ -20,6 +20,7 @@ Pallas kernel; this module holds the model-level (jnp) definitions.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -98,6 +99,48 @@ def bitplane_decompose(w_q_nonneg: Array, n_planes: Optional[int] = None
     ks = jnp.arange(n_planes, dtype=jnp.int32)
     planes = (wi[None, ...] >> ks.reshape((-1,) + (1,) * wi.ndim)) & 1
     return planes.astype(jnp.int8)
+
+
+def truncate_codes(codes: Array, shift) -> Array:
+    """Rung view of max-R signed codes: sign(c) * (|c| >> shift), int32.
+
+    Because the unsigned split puts |c| entirely in one of pos/neg, this
+    equals dropping the low ``shift`` bit-planes of BOTH plane stacks —
+    the truncation-consistent scheme (DESIGN.md §11): the rung-b codes are
+    by construction the top planes of the max-R codes, and the rung step
+    is gamma_R * 2^shift. ``shift`` may be a traced integer scalar.
+    """
+    ci = jnp.asarray(codes).astype(jnp.int32)
+    sh = jnp.asarray(shift, jnp.int32)
+    return ((jnp.maximum(ci, 0) >> sh)
+            - (jnp.maximum(-ci, 0) >> sh))
+
+
+def masked_codes(codes: Array, shift) -> Array:
+    """``truncate_codes(c, s) << s`` — the integer weight a plane-skipping
+    kernel realizes when it keeps the STATIC plane weights 2^p and skips
+    planes p < shift over the max-R plane stacks. Still int8-range
+    (|masked| <= |c| <= 127), and dequantizes with the UNCHANGED max-R
+    gamma: masked * gamma_R == truncated * (gamma_R * 2^shift)."""
+    sh = jnp.asarray(shift, jnp.int32)
+    return truncate_codes(codes, sh) << sh
+
+
+def view_shift(r_max: float, r: float, max_shift: int = 6) -> int:
+    """Plane shift realizing budget ``r`` as a view over a max-``r_max``
+    store: the power of two nearest r_max / r, clipped to the plane count.
+    The rung then runs at ``snapped_r(r_max, shift)`` — the truncation-
+    consistent scheme trades exact per-rung budgets for one shared weight
+    store (DESIGN.md §11); the accuracy cost of the snap is measured by
+    ``benchmarks/artifact_parity.py``."""
+    if r <= 0 or r_max <= 0:
+        raise ValueError(f"budgets must be positive: r_max={r_max}, r={r}")
+    return int(min(max(round(math.log2(r_max / r)), 0), max_shift))
+
+
+def snapped_r(r_max: float, shift: int) -> float:
+    """The budget a ``shift``-plane view actually realizes: r_max / 2^s."""
+    return float(r_max) / float(1 << int(shift))
 
 
 def bitplane_matmul(x: Array, planes_pos: Array, planes_neg: Array,

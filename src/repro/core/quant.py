@@ -160,6 +160,14 @@ def affine_scale_zp(lo: Array, hi: Array, n) -> Tuple[Array, Array]:
     return s, z
 
 
+def cap_levels(bits: int, cap: int = 127) -> int:
+    """Serving-side level count for a ``bits``-wide unsigned code: 2^b - 1
+    capped so codes stay int8-safe. The ONE derivation shared by the
+    serving quantizer, the KV cache, and the kernel dispatch — the number
+    of live cache bit-planes is recovered from it as log2(n_lvl + 1)."""
+    return min((1 << int(bits)) - 1, cap)
+
+
 def affine_encode(x: Array, s: Array, z: Array, n) -> Array:
     """Map reals to affine codes ``clip(round(x/s) + z, 0, n)`` for a
     precomputed (s, z) — float-typed exact integers. This op sequence is

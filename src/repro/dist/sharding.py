@@ -38,9 +38,11 @@ _COL = {"wq", "wk", "wv", "w_gate", "w_up", "router", "in_proj", "wr",
 _WEIGHT_KEYS = {"w", "w_q", "w_planes_pos", "w_planes_neg"}
 # leaves that are always replicated (act_*: per-projection activation-
 # quantizer scalars — levels, frozen calibration range, and the hoisted
-# (s, z) the fused-prologue kernels read)
+# (s, z) the fused-prologue kernels read; plane_shift: the rung view's
+# dropped-low-plane count, a per-module data scalar)
 _REPLICATED_KEYS = {"b", "bias", "scale", "w_scale", "act_n", "act_nlvl",
-                    "act_lo", "act_hi", "act_s", "act_z", "w_colsum"}
+                    "act_lo", "act_hi", "act_s", "act_z", "w_colsum",
+                    "plane_shift"}
 
 
 def _path_names(path) -> list[str]:

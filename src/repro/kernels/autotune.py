@@ -1,18 +1,29 @@
-"""Block-shape autotuner for the Pallas serving matmuls.
+"""Kernel-parameter autotuner for the Pallas serving matmuls.
 
 The fused-prologue kernels (``pann_matmul_act`` / ``pann_matmul_packed_act``)
 are shape-sensitive in two ways the old one-size heuristic was not: the
 persistent VMEM codes panel costs ``bm * K`` bytes (large-K projections want
-a smaller bm), and the double-buffered plane slots cost ``4 * bk * bn``
-(unpacked) or ``bk * bn / 2`` (packed). This module owns
+a smaller bm), and the multi-buffered plane slots cost
+``depth * 2 * bk * bn`` (unpacked) or ``depth * 2 * bk * bn / 8`` (packed).
+Beyond block shapes, the kernels expose two schedule knobs the tuner
+searches: the DMA pipeline depth (VMEM slots per plane stream) and the grid
+iteration order ('mnk' row-panel-outer vs 'nmk' N-outer). This module owns
 
-  * the VMEM cost model + deterministic heuristic (``heuristic_blocks``),
-  * a persistent on-disk cache of measured-best blocks keyed by
-    ``device_kind | backend | MxKxN | planes`` (``blocks_for`` /
-    ``record``), and
+  * the VMEM cost model + deterministic heuristic (``heuristic_blocks`` /
+    ``heuristic_params``),
+  * a persistent on-disk cache of measured-best parameters keyed by
+    ``device_kind | backend | MxKxN | planes | planes_active``
+    (``params_for`` / ``record``), and
   * the offline measurement loop (``tune``) that fills it.
 
-Determinism contract: ``blocks_for`` is called at TRACE time inside the
+``planes_active`` keying: the serving ladder runs EVERY rung through one
+compiled kernel (the plane shift is data), so its trace-time lookups key on
+the full plane count (active = planes, the default). Offline tuning of a
+single-point artifact — where the live plane count is static — may pass
+``active`` to record per-count winners; the keys never collide with the
+ladder's.
+
+Determinism contract: ``params_for`` is called at TRACE time inside the
 jitted decode step, so it must be a pure function of (shape, cache state) —
 it never measures, never mutates the cache, and therefore cannot retrace a
 warmed engine (``ServeEngine.assert_no_recompile`` holds with the autotuner
@@ -24,23 +35,56 @@ read/write path exercised by CPU CI.
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro_pann/autotune.json``. The file is versioned and rewritten
 atomically; a corrupt or foreign-version file is ignored, never crashed on.
+Version history: v1 stored bare [bm, bn, bk] triples; v2 adds the schedule
+knobs ({"blocks", "depth", "order"}) and the planes_active key segment.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, NamedTuple, Optional
 
 import jax
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
+GRID_ORDERS = ("mnk", "nmk")
+DMA_DEPTHS = (2, 3)
+
 # process-local snapshot of the on-disk cache; loaded lazily, kept in sync
-# by record(). Maps key -> [bm, bn, bk].
+# by record(). Maps key -> {"blocks": [bm, bn, bk], "depth": d, "order": o}.
 _cache: Optional[dict] = None
+
+
+class KernelParams(NamedTuple):
+    """One tuning decision: block shapes + schedule knobs."""
+    bm: int
+    bn: int
+    bk: int
+    depth: int = 2
+    order: str = "mnk"
+
+    @property
+    def blocks(self) -> tuple[int, int, int]:
+        return (self.bm, self.bn, self.bk)
+
+
+def _as_params(value) -> KernelParams:
+    """Normalize a (bm, bn, bk) triple, KernelParams, or cache dict."""
+    if isinstance(value, KernelParams):
+        return value
+    if isinstance(value, dict):
+        bm, bn, bk = (int(v) for v in value["blocks"])
+        return KernelParams(bm, bn, bk, int(value.get("depth", 2)),
+                            str(value.get("order", "mnk")))
+    vals = list(value)
+    if len(vals) == 3:
+        return KernelParams(int(vals[0]), int(vals[1]), int(vals[2]))
+    return KernelParams(int(vals[0]), int(vals[1]), int(vals[2]),
+                        int(vals[3]), str(vals[4]))
 
 
 def device_kind() -> str:
@@ -61,8 +105,11 @@ def cache_path() -> str:
 
 
 def cache_key(m: int, k: int, n: int, planes: int, backend: str,
-              kind: Optional[str] = None) -> str:
-    return f"{kind or device_kind()}|{backend}|{m}x{k}x{n}|p{planes}"
+              kind: Optional[str] = None,
+              active: Optional[int] = None) -> str:
+    active = planes if active is None else active
+    return (f"{kind or device_kind()}|{backend}|{m}x{k}x{n}"
+            f"|p{planes}a{active}")
 
 
 def _load() -> dict:
@@ -102,14 +149,16 @@ def clear_memory_cache() -> None:
     _cache = None
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, k: int, packed: bool) -> int:
+def vmem_bytes(bm: int, bn: int, bk: int, k: int, packed: bool,
+               depth: int = 2) -> int:
     """VMEM working set of the fused-prologue kernels for one grid step."""
-    plane_slots = (bk // 8) * bn * 4 if packed else bk * bn * 4
-    return (4 * bm * bk        # fp32 x landing pad
-            + bm * k           # persistent int8 codes panel
-            + plane_slots      # 2 double-buffer slots x 2 signs
-            + 4 * bm * bn      # int32 accumulator
-            + 4 * bm * bn)     # f32 output block
+    plane_tile = (bk // 8) * bn if packed else bk * bn
+    return (4 * bm * bk            # fp32 x landing pad
+            + bm * k               # persistent int8 codes panel
+            + depth * 2 * plane_tile   # DMA slots x 2 signs
+            + bk * bn              # reconstructed-w int8 scratch
+            + 4 * bm * bn          # int32 accumulator
+            + 4 * bm * bn)         # f32 output block
 
 
 def heuristic_blocks(m: int, n: int, k: int, planes: int = 7,
@@ -133,21 +182,39 @@ def heuristic_blocks(m: int, n: int, k: int, planes: int = 7,
     return bm, bn, bk
 
 
-def blocks_for(m: int, k: int, n: int, planes: int, backend: str
-               ) -> tuple[int, int, int]:
-    """Trace-time block lookup: measured-best from the cache when present,
-    the VMEM heuristic otherwise. Pure in (args, cache state)."""
-    hit = _load().get(cache_key(m, k, n, planes, backend))
+def heuristic_params(m: int, n: int, k: int, planes: int = 7,
+                     packed: bool = False,
+                     vmem_budget: int = 8 * 2 ** 20) -> KernelParams:
+    """Heuristic blocks + the conservative schedule (double-buffer, 'mnk'
+    row-panel-outer — the order whose prologue never re-encodes)."""
+    return KernelParams(*heuristic_blocks(m, n, k, planes, packed,
+                                          vmem_budget))
+
+
+def params_for(m: int, k: int, n: int, planes: int, backend: str,
+               active: Optional[int] = None) -> KernelParams:
+    """Trace-time parameter lookup: measured-best from the cache when
+    present, the VMEM heuristic otherwise. Pure in (args, cache state)."""
+    hit = _load().get(cache_key(m, k, n, planes, backend, active=active))
     if hit:
-        bm, bn, bk = (int(v) for v in hit)
-        return bm, bn, bk
-    return heuristic_blocks(m, n, k, planes, packed=(backend == "packed"))
+        return _as_params(hit)
+    return heuristic_params(m, n, k, planes, packed=(backend == "packed"))
+
+
+def blocks_for(m: int, k: int, n: int, planes: int, backend: str,
+               active: Optional[int] = None) -> tuple[int, int, int]:
+    """Block-shape view of ``params_for`` (compat shim for callers that
+    only consume (bm, bn, bk))."""
+    return params_for(m, k, n, planes, backend, active).blocks
 
 
 def record(m: int, k: int, n: int, planes: int, backend: str,
-           blocks: tuple[int, int, int]) -> None:
-    """Persist a tuning decision for ``blocks_for`` to find."""
-    _load()[cache_key(m, k, n, planes, backend)] = list(blocks)
+           params, active: Optional[int] = None) -> None:
+    """Persist a tuning decision for ``params_for`` to find. Accepts a
+    KernelParams or a bare (bm, bn, bk) triple (depth 2, order 'mnk')."""
+    p = _as_params(params)
+    _load()[cache_key(m, k, n, planes, backend, active=active)] = {
+        "blocks": list(p.blocks), "depth": p.depth, "order": p.order}
     _save()
 
 
@@ -155,7 +222,7 @@ def candidate_blocks(m: int, n: int, k: int, planes: int,
                      packed: bool = False,
                      vmem_budget: int = 8 * 2 ** 20
                      ) -> list[tuple[int, int, int]]:
-    """The measurement grid: every MXU-aligned (bm, bn, bk) combination
+    """The block-shape grid: every MXU-aligned (bm, bn, bk) combination
     that fits the VMEM model, heuristic included."""
     bms = sorted({min(m, b) for b in (32, 64, 128)})
     bns = sorted({min(n, b) for b in (128, 256)})
@@ -171,30 +238,46 @@ def candidate_blocks(m: int, n: int, k: int, planes: int,
     return sorted(out)
 
 
-def tune(m: int, k: int, n: int, planes: int, backend: str,
-         runner: Optional[Callable[[tuple[int, int, int]], float]] = None,
-         candidates: Optional[Iterable[tuple[int, int, int]]] = None
-         ) -> tuple[int, int, int]:
-    """Offline: pick the best blocks for one projection shape and persist.
+def candidate_params(m: int, n: int, k: int, planes: int,
+                     packed: bool = False,
+                     vmem_budget: int = 8 * 2 ** 20) -> list[KernelParams]:
+    """The full measurement grid: block shapes x DMA depths x grid orders,
+    filtered by the depth-aware VMEM model."""
+    out = {heuristic_params(m, n, k, planes, packed, vmem_budget)}
+    for bm, bn, bk in candidate_blocks(m, n, k, planes, packed, vmem_budget):
+        for depth in DMA_DEPTHS:
+            if vmem_bytes(bm, bn, bk, k, packed, depth) > vmem_budget:
+                continue
+            for order in GRID_ORDERS:
+                out.add(KernelParams(bm, bn, bk, depth, order))
+    return sorted(out)
 
-    ``runner(blocks) -> seconds`` measures one candidate (built by
+
+def tune(m: int, k: int, n: int, planes: int, backend: str,
+         runner: Optional[Callable[[KernelParams], float]] = None,
+         candidates: Optional[Iterable] = None,
+         active: Optional[int] = None) -> KernelParams:
+    """Offline: pick the best kernel parameters for one projection shape
+    and persist.
+
+    ``runner(params) -> seconds`` measures one candidate (built by
     ``dispatch.tune_projection``). Off-TPU — or with no runner — the
     heuristic is recorded without timing: interpret-mode measurements are
     emulator noise, but the recorded entry still exercises the cache path
     end-to-end in CPU CI. A cached entry short-circuits (idempotent warmup).
     """
-    key = cache_key(m, k, n, planes, backend)
+    key = cache_key(m, k, n, planes, backend, active=active)
     hit = _load().get(key)
     if hit:
-        bm, bn, bk = (int(v) for v in hit)
-        return bm, bn, bk
+        return _as_params(hit)
     packed = backend == "packed"
     if runner is None or device_kind() == "cpu" or \
             jax.default_backend() != "tpu":
-        best = heuristic_blocks(m, n, k, planes, packed)
+        best = heuristic_params(m, n, k, planes, packed)
     else:
-        cands = list(candidates if candidates is not None
-                     else candidate_blocks(m, n, k, planes, packed))
+        cands = [_as_params(c) for c in
+                 (candidates if candidates is not None
+                  else candidate_params(m, n, k, planes, packed))]
         timed = []
         for c in cands:
             try:
@@ -202,6 +285,6 @@ def tune(m: int, k: int, n: int, planes: int, backend: str,
             except Exception:
                 continue        # a candidate the compiler rejects is skipped
         best = min(timed)[1] if timed else \
-            heuristic_blocks(m, n, k, planes, packed)
-    record(m, k, n, planes, backend, best)
+            heuristic_params(m, n, k, planes, packed)
+    record(m, k, n, planes, backend, best, active=active)
     return best

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.pann import bitplane_decompose
+from repro.core.pann import bitplane_decompose, masked_codes
 from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels import pann_attention as _pa
@@ -134,49 +134,61 @@ def _matmul_ref(q8: Array, w_q: Array, s, gamma: Array, zcol: Array
     return (y_int - zcol).astype(jnp.float32) * s * gamma
 
 
-def _qparams(s, z, n_lvl) -> Array:
-    """(1, 3) f32 SMEM block [s, z, n_lvl] for the fused-prologue kernels."""
+def _qparams(s, z, n_lvl, shift=None) -> Array:
+    """(1, 4) f32 SMEM block [s, z, n_lvl, plane_shift] for the
+    fused-prologue kernels. ``shift`` is the count of LOW bit-planes the
+    kernel skips at runtime (a rung view over a max-R plane store); None
+    means 0 — all planes live."""
+    if shift is None:
+        shift = jnp.float32(0.0)
     return jnp.stack([jnp.asarray(s, jnp.float32).reshape(()),
                       jnp.asarray(z, jnp.float32).reshape(()),
-                      jnp.asarray(n_lvl, jnp.float32).reshape(())]
-                     ).reshape(1, 3)
+                      jnp.asarray(n_lvl, jnp.float32).reshape(()),
+                      jnp.asarray(shift, jnp.float32).reshape(())]
+                     ).reshape(1, 4)
 
 
 def _matmul_fused(xf: Array, w_q: Array, s, z, n_lvl, gamma: Array,
                   zcol: Array, n_planes: int, interpret: bool,
-                  blocks: tuple[int, int, int] | None = None) -> Array:
+                  shift=None,
+                  params: autotune.KernelParams | None = None) -> Array:
     """Fused-prologue bit-plane kernel on planes rebuilt from the int8
     codes: fp32 activations in, affine-encoded in VMEM (codes never touch
     HBM). Padded fp32 rows/cols encode to the code z, which multiplies the
-    zero-padded plane region — an exact no-op, then sliced away."""
+    zero-padded plane region — an exact no-op, then sliced away. With a
+    view ``shift``, the codes are the max-R store's and the kernel skips
+    the dead low planes at runtime."""
     pos = bitplane_decompose(jnp.maximum(w_q, 0), n_planes)
     neg = bitplane_decompose(jnp.maximum(-w_q.astype(jnp.int32), 0),
                              n_planes)
     m, k = xf.shape
     n = w_q.shape[-1]
-    bm, bn, bk = blocks or autotune.blocks_for(m, k, n, n_planes, "fused")
+    if params is None:
+        params = autotune.params_for(m, k, n, n_planes, "fused")
+    bm, bn, bk = params.blocks
     xp = ops._pad_to(ops._pad_to(xf, bm, 0), bk, 1)
     pp = ops._pad_to(ops._pad_to(pos, bk, 1), bn, 2)
     pn = ops._pad_to(ops._pad_to(neg, bk, 1), bn, 2)
     gp = ops._pad_to(gamma, bn, 0)
     zp = ops._pad_to(zcol, bn, 0)
-    y = _pm.pann_matmul_act(xp, pp, pn, _qparams(s, z, n_lvl), gp, zp,
-                            mode="fused", bm=bm, bn=bn, bk=bk,
+    y = _pm.pann_matmul_act(xp, pp, pn, _qparams(s, z, n_lvl, shift), gp,
+                            zp, mode="fused", bm=bm, bn=bn, bk=bk,
+                            depth=params.depth, grid_order=params.order,
                             interpret=interpret)
     return y[:m, :n]
 
 
 def _matmul_packed(xf: Array, pp: Array, pn: Array, s, z, n_lvl,
-                   gamma: Array, zcol: Array, interpret: bool,
-                   blocks: tuple[int, int, int] | None = None) -> Array:
+                   gamma: Array, zcol: Array, interpret: bool, shift=None,
+                   params: autotune.KernelParams | None = None) -> Array:
     """Fused-prologue packed-plane kernel on the uint8 artifact leaves."""
     m, k = xf.shape
     k_full = pp.shape[-2] * 8        # pack_planes padded K up to 8
     n = pp.shape[-1]
     n_planes = pp.shape[-3]
-    if blocks is None:
-        blocks = autotune.blocks_for(m, k_full, n, n_planes, "packed")
-    bm, bn, bk = blocks
+    if params is None:
+        params = autotune.params_for(m, k_full, n, n_planes, "packed")
+    bm, bn, bk = params.blocks
     bk = _pick_bk(bk, 8)             # the packed kernel needs bk % 8 == 0
     xp = ops._pad_to(ops._pad_to(xf, bm, 0), k_full, 1)
     xp = ops._pad_to(xp, bk, 1)
@@ -185,8 +197,11 @@ def _matmul_packed(xf: Array, pp: Array, pn: Array, s, z, n_lvl,
     pnp = ops._pad_to(ops._pad_to(pn, k_pad // 8, 1), bn, 2)
     gp = ops._pad_to(gamma, bn, 0)
     zp = ops._pad_to(zcol, bn, 0)
-    y = _pk.pann_matmul_packed_act(xp, ppp, pnp, _qparams(s, z, n_lvl),
+    y = _pk.pann_matmul_packed_act(xp, ppp, pnp,
+                                   _qparams(s, z, n_lvl, shift),
                                    gp, zp, bm=bm, bn=bn, bk=bk,
+                                   depth=params.depth,
+                                   grid_order=params.order,
                                    interpret=interpret)
     return y[:m, :n]
 
@@ -260,6 +275,13 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     # the bit-exactness contract must survive jit, not just eager mode
     xf = jax.lax.optimization_barrier(x.reshape(-1, k).astype(jnp.float32))
     s, z, n_lvl = _act_scalars(xf, p)
+    # plane_shift: a rung VIEW over a max-R plane store (models/serving
+    # build_rung_views) marks its dead low planes with this DATA leaf; the
+    # kernels skip them at runtime, so every rung shares one compilation.
+    # Legacy artifacts have no leaf -> shift 0 -> the pre-view dataflow.
+    shift = p.get("plane_shift")
+    if shift is not None:
+        shift = jnp.asarray(shift, jnp.float32).reshape(())
     # seal the quantizer scalars: left open, XLA folds their derivation
     # into the backend-specific consumer cluster (e.g. strength-reducing
     # the x/s divide differently next to a dot than next to a pallas call)
@@ -278,7 +300,9 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     # this reduction; recomputing is the fallback for hand-built leaves
     colsum = p.get("w_colsum")
     if colsum is None:
-        colsum = jnp.sum(w_q.astype(jnp.int32), axis=-2)
+        wc = (masked_codes(w_q, shift) if shift is not None
+              else w_q.astype(jnp.int32))
+        colsum = jnp.sum(wc, axis=-2)
     zcol = z.astype(jnp.int32) * colsum
     if "b" in p:
         # bias joins the accumulator too, quantized onto the output grid
@@ -296,22 +320,36 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
         n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
                     else INT8_PLANES)
         y = _matmul_fused(xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
-                          interpret)
+                          interpret, shift=shift)
     elif name == "packed":
         y = _matmul_packed(xf, p["w_planes_pos"], p["w_planes_neg"],
-                           s, z, n_lvl, gamma, zcol, interpret)
+                           s, z, n_lvl, gamma, zcol, interpret, shift=shift)
     else:
         # the jnp oracle materializes the codes (quant.affine_encode — the
         # formula the kernels inline) and seals them so XLA cannot re-fuse
         # the encode into the dot differently than the kernels would
         q8 = jax.lax.optimization_barrier(
             quant.affine_encode(xf, s, z, n_lvl).astype(jnp.int8))
-        y = _matmul_ref(q8, w_q, s, gamma, zcol)
+        # view shift: mask the dead low planes out of the codes — the jnp
+        # mirror of the kernels' plane skip (masked * gamma_R is exactly
+        # the truncated-code weight at the rung step gamma_R * 2^shift)
+        w_ref_q = (masked_codes(w_q, shift).astype(jnp.int8)
+                   if shift is not None else w_q)
+        y = _matmul_ref(q8, w_ref_q, s, gamma, zcol)
     return y.reshape(*lead, n_out).astype(x.dtype)
 
 
+def cache_planes_active(n_lvl) -> Array:
+    """Live LOW bit-planes of a cache code space with ``n_lvl`` levels:
+    codes <= n_lvl < 2^b zero every plane >= b = log2(n_lvl + 1). Traced —
+    the level count is a DATA leaf so ladder rungs share one compilation."""
+    n = jnp.asarray(n_lvl, jnp.float32).reshape(())
+    return jnp.ceil(jnp.log2(n + 1.0) - 1e-6)
+
+
 def decode_attention(q: Array, kv, backend, *, num_kv_heads: int,
-                     window=None, softcap: float = 0.0) -> Array:
+                     window=None, softcap: float = 0.0,
+                     k_nlvl=None, v_nlvl=None) -> Array:
     """Decode attention over a quantized KV cache — the attention analogue
     of ``serving_linear``, one dispatch point for every backend.
 
@@ -328,6 +366,11 @@ def decode_attention(q: Array, kv, backend, *, num_kv_heads: int,
     fallback mirrors ``resolve_backend``: 'fused'/'packed' both name the
     one bit-plane attention kernel and degrade to the jnp oracle off-TPU
     unless forced.
+
+    ``k_nlvl``/``v_nlvl`` (traced scalars; the cache's level-count leaves)
+    let the kernel skip the DMA + unpack of the dead HIGH planes — codes
+    <= n_lvl leave planes >= log2(n_lvl+1) all-zero, so skipping them is
+    bit-exact and the oracle needs no counterpart. None = all planes live.
     """
     name, force = parse_backend(backend or "ref")
     use_kernel = name != "ref" and (ops.on_tpu() or force)
@@ -346,7 +389,12 @@ def decode_attention(q: Array, kv, backend, *, num_kv_heads: int,
     args = (qq, z_q, q_scale, kv.k_planes, kv.k_s, kv.k_z,
             kv.v_planes, kv.v_s, kv.v_z, kv.length)
     if use_kernel:
-        out = _pa.decode_attention(*args, window=window, softcap=softcap,
+        k_pact = (cache_planes_active(k_nlvl) if k_nlvl is not None
+                  else None)
+        v_pact = (cache_planes_active(v_nlvl) if v_nlvl is not None
+                  else None)
+        out = _pa.decode_attention(*args, k_pact, v_pact, window=window,
+                                   softcap=softcap,
                                    interpret=not ops.on_tpu())
     else:
         out = _ref.decode_attention_ref(*args, window=window,
@@ -368,12 +416,19 @@ def _time_call(fn, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def tune_projection(m: int, p: dict, backend: str) -> None:
-    """Measure-and-cache the best (bm, bn, bk) for one projection artifact
-    at decode row count ``m``. Strictly offline: call before ``warmup`` —
-    ``serving_linear`` then picks the cached blocks up at trace time
-    (``autotune.blocks_for``). Off-TPU the heuristic is recorded untimed
-    (interpret-mode timings are emulator noise; see ``kernels.autotune``).
+def tune_projection(m: int, p: dict, backend: str,
+                    planes_active: int | None = None) -> None:
+    """Measure-and-cache the best kernel parameters (blocks + DMA depth +
+    grid order) for one projection artifact at decode row count ``m``.
+    Strictly offline: call before ``warmup`` — ``serving_linear`` then
+    picks the cached parameters up at trace time (``autotune.params_for``).
+    Off-TPU the heuristic is recorded untimed (interpret-mode timings are
+    emulator noise; see ``kernels.autotune``).
+
+    ``planes_active`` keys a single-point tuning run where the live plane
+    count is STATIC (a fixed deployment at one rung). The serving ladder
+    leaves it None: one compiled kernel serves every rung (the shift is
+    data), so its lookups key on the full plane count.
     """
     name, _ = parse_backend(backend)
     if name == "ref":
@@ -386,22 +441,29 @@ def tune_projection(m: int, p: dict, backend: str) -> None:
     key = jax.random.PRNGKey(0)
     xf = jax.random.normal(key, (m, k), jnp.float32)
     s, z, n_lvl = _act_scalars(xf, p)
+    shift = p.get("plane_shift")
+    if shift is not None:
+        shift = jnp.asarray(shift, jnp.float32).reshape(())
     colsum = p.get("w_colsum")
     if colsum is None:
-        colsum = jnp.sum(w_q.astype(jnp.int32), axis=-2)
+        wc = (masked_codes(w_q, shift) if shift is not None
+              else w_q.astype(jnp.int32))
+        colsum = jnp.sum(wc, axis=-2)
     zcol = z.astype(jnp.int32) * colsum
     gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
     k_eff = p["w_planes_pos"].shape[-2] * 8 if name == "packed" else k
 
-    def runner(blocks):
+    def runner(params):
         if name == "packed":
             fn = lambda: _matmul_packed(
                 xf, p["w_planes_pos"], p["w_planes_neg"], s, z, n_lvl,
-                gamma, zcol, interpret=not ops.on_tpu(), blocks=blocks)
+                gamma, zcol, interpret=not ops.on_tpu(), shift=shift,
+                params=params)
         else:
             fn = lambda: _matmul_fused(
                 xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
-                interpret=not ops.on_tpu(), blocks=blocks)
+                interpret=not ops.on_tpu(), shift=shift, params=params)
         return _time_call(fn)
 
-    autotune.tune(m, k_eff, n, n_planes, name, runner)
+    autotune.tune(m, k_eff, n, n_planes, name, runner,
+                  active=planes_active)

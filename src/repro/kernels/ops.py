@@ -53,7 +53,11 @@ def _pick_blocks(m: int, n: int, k: int, *, vmem_budget: int = 8 * 2 ** 20
 
 def quantize_act(x: Array, bits: int = 8, interpret: bool | None = None
                  ) -> tuple[Array, Array]:
-    """Per-row unsigned activation quantization. x: (..., K) -> int8 codes."""
+    """Per-row unsigned activation quantization. x: (..., K) -> int8 codes.
+
+    Oracle/benchmark path only (see ``kernels.quantize_act``): serving
+    quantizes activations inside the fused matmul prologue, never through
+    this standalone pass."""
     interpret = (not on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -126,7 +130,7 @@ def pann_matmul(x: Array, packed: dict, act_bits: int = 8,
     gamma = packed["gamma"]
     m, k = x.shape
     p, _, n = planes_pos.shape
-    n_lvl = jnp.float32(min((1 << int(act_bits)) - 1, 127))
+    n_lvl = jnp.float32(quant.cap_levels(int(act_bits)))
     lo, hi = quant.act_range_bounds(x.astype(jnp.float32),
                                     include_zero=True)
     s, z = quant.affine_scale_zp(lo, hi, n_lvl)

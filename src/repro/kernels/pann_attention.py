@@ -4,14 +4,24 @@ packed bit-plane KV cache (docs/kv_cache.md; DESIGN.md §10).
 The cache stores K/V as unsigned affine codes, bit-plane-decomposed and
 packed 8 bits/byte along head_dim (``kernels.ref.pack_cache_codes`` — NOT
 the weight-plane ``pack_planes``, which packs along K). One grid cell per
-(batch, kv_head); each cell unpacks its (P, S, hd/8) plane panel in VMEM,
-runs the exact int32 QK^T with BOTH zero points corrected inside the
-accumulator (the serving_linear ``zcol`` convention, applied twice), the
-fp32 softmax epilogue in the oracle's exact op sequence, then re-quantizes
-the probabilities to a fixed 2^14 grid for an exact int32 PV pass —
-``sum_s p = 1`` bounds ``pq @ vq`` by ``127 * 2^14``, int32-safe for ANY
-sequence length. Bit-identical (fp32) to ``kernels.ref.decode_attention_ref``
-(tests/test_kv_cache_quant.py).
+(batch, kv_head); each cell streams its (S, hd/8) plane panels through
+double-buffered manual DMAs, accumulates the unpacked codes into an int32
+(S, hd) panel, runs the exact int32 QK^T with BOTH zero points corrected
+inside the accumulator (the serving_linear ``zcol`` convention, applied
+twice), the fp32 softmax epilogue in the oracle's exact op sequence, then
+re-quantizes the probabilities to a fixed 2^14 grid for an exact int32 PV
+pass — ``sum_s p = 1`` bounds ``pq @ vq`` by ``127 * 2^14``, int32-safe for
+ANY sequence length. Bit-identical (fp32) to
+``kernels.ref.decode_attention_ref`` (tests/test_kv_cache_quant.py).
+
+Plane skipping: cache codes are <= n_lvl < 2^b, so only the LOW
+``planes_active`` planes can be nonzero (the opposite prefix from the
+weight kernels, which skip low planes under a view shift). The per-role
+active counts ride in as SMEM DATA scalars — derived from the cache's
+``k_nlvl``/``v_nlvl`` leaves — so a 2-bit cache rung DMAs and shift-adds 2
+planes, not 7, while every rung shares one compiled kernel. Skipped planes
+are all-zero in the cache by construction, so the jnp oracle needs no
+planes_active argument and the parity suite is unchanged.
 
 Whole-S blocks: decode reads every cached position once per token, so the
 panel (7 planes x S x hd/8 bytes) must fit VMEM — ~57 KB at S=4096,
@@ -35,30 +45,55 @@ Array = jax.Array
 NEG_INF = -1e30     # matches models.attention.NEG_INF / ref._CACHE_NEG_INF
 
 
-def _unpack_panel(pk: Array) -> Array:
-    """(P, S, d8) uint8 packed planes -> (S, hd) int32 codes, in-VMEM.
-    Byte j, bit i -> element 8j+i; plane p -> bit p of the code — the exact
-    inverse of ``ref.pack_cache_codes``."""
-    p, s, d8 = pk.shape
-    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 8), 3)
-    bits = (pk[..., None].astype(jnp.int32) >> shifts) & 1   # (P, S, d8, 8)
-    bits = bits.reshape(p, s, d8 * 8)
-    plane_w = jnp.left_shift(
-        jnp.int32(1), jax.lax.broadcasted_iota(jnp.int32, (p, 1, 1), 0))
-    return jnp.sum(bits * plane_w, axis=0)                   # (S, hd)
+def _unpack_plane(pk: Array) -> Array:
+    """(S, d8) uint8 — ONE packed plane — -> (S, hd) int32 {0,1} bits.
+    Byte j, bit i -> element 8j+i: the per-plane slice of the exact inverse
+    of ``ref.pack_cache_codes``."""
+    s, d8 = pk.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 8), 2)
+    bits = (pk[..., None].astype(jnp.int32) >> shifts) & 1   # (S, d8, 8)
+    return bits.reshape(s, d8 * 8)
 
 
-def _decode_attention_kernel(qp_ref, pos_ref, q_ref, kp_ref, ks_ref, kz_ref,
-                             vp_ref, vs_ref, vz_ref, o_ref, *, hd: int,
-                             window, softcap: float, prob_scale: float):
+def _decode_attention_kernel(qp_ref, pos_ref, q_ref, kp_hbm, ks_ref, kz_ref,
+                             vp_hbm, vs_ref, vz_ref, o_ref, kcode, vcode,
+                             kbuf, vbuf, ksem, vsem, *, n_planes: int,
+                             hd: int, window, softcap: float,
+                             prob_scale: float):
     """Grid = (B, K): one cell per (batch, kv_head)."""
+    bi, ki = pl.program_id(0), pl.program_id(1)
     qz = qp_ref[0, 0].astype(jnp.int32)
     q_scale = qp_ref[0, 1]                      # s_q * hd**-0.5, sealed
+    k_pact = jnp.round(qp_ref[0, 2]).astype(jnp.int32)
+    v_pact = jnp.round(qp_ref[0, 3]).astype(jnp.int32)
     pos = pos_ref[0, 0]
+    s = kcode.shape[0]
+
+    def plane_dma(buf, hbm, sem, slot, p):
+        return pltpu.make_async_copy(hbm.at[bi, p, :, ki, :],
+                                     buf.at[slot], sem.at[slot])
+
+    # plane 0 is live for ANY level count >= 1; higher planes are started
+    # and waited under matching predicates so the semaphores stay balanced
+    plane_dma(kbuf, kp_hbm, ksem, 0, 0).start()
+    plane_dma(vbuf, vp_hbm, vsem, 0, 0).start()
+
+    # accumulate codes = sum_p 2^p * plane_p over the LIVE prefix only;
+    # the dead high planes are all-zero in the cache, so the sum equals the
+    # full 7-plane unpack bit-for-bit
+    kcode[...] = jnp.zeros_like(kcode)
+    for p in range(n_planes):
+        @pl.when(p < k_pact)
+        def _accum_k(p=p, slot=p % 2):
+            if p + 1 < n_planes:
+                @pl.when(p + 1 < k_pact)
+                def _prefetch():
+                    plane_dma(kbuf, kp_hbm, ksem, 1 - (p % 2), p + 1).start()
+            plane_dma(kbuf, kp_hbm, ksem, slot, p).wait()
+            kcode[...] += jnp.int32(1 << p) * _unpack_plane(kbuf[slot])
 
     qq = q_ref[...][0, 0]                       # (G, hd) int32 affine codes
-    kq = _unpack_panel(kp_ref[...][0, :, :, 0, :])           # (S, hd) int32
-    s = kq.shape[0]
+    kq = kcode[...]                             # (S, hd) int32
 
     # exact int32 QK^T: (qq - z_q) . (kq - z_k) expanded inside the
     # accumulator — codes <= 127 and hd <= 256 keep every term int32-safe
@@ -82,16 +117,28 @@ def _decode_attention_kernel(qp_ref, pos_ref, q_ref, kp_ref, ks_ref, kz_ref,
         valid &= (pos - k_pos) < window
     sc = jnp.where(valid, sc, NEG_INF)
     m = jnp.max(sc, axis=-1, keepdims=True)
-    p = jnp.exp(sc - m)
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    p_ = jnp.exp(sc - m)
+    p_ = p_ / jnp.sum(p_, axis=-1, keepdims=True)
+
+    # stream + accumulate the V planes (their DMAs overlapped the QK^T work)
+    vcode[...] = jnp.zeros_like(vcode)
+    for p in range(n_planes):
+        @pl.when(p < v_pact)
+        def _accum_v(p=p, slot=p % 2):
+            if p + 1 < n_planes:
+                @pl.when(p + 1 < v_pact)
+                def _prefetch():
+                    plane_dma(vbuf, vp_hbm, vsem, 1 - (p % 2), p + 1).start()
+            plane_dma(vbuf, vp_hbm, vsem, slot, p).wait()
+            vcode[...] += jnp.int32(1 << p) * _unpack_plane(vbuf[slot])
 
     # exact int32 PV: rescale every position into the largest valid V scale,
     # re-quantize the probabilities, subtract the V zero point in-accumulator
-    vq = _unpack_panel(vp_ref[...][0, :, :, 0, :])           # (S, hd) int32
+    vq = vcode[...]                                          # (S, hd) int32
     vs = vs_ref[...][0]                                      # (S,)
     sv_ref = jnp.maximum(jnp.max(jnp.where(valid[0], vs, 0.0)), 1e-12)
     ratio = vs / sv_ref
-    pq = jnp.round(p * ratio[None, :] * prob_scale).astype(jnp.int32)
+    pq = jnp.round(p_ * ratio[None, :] * prob_scale).astype(jnp.int32)
     pv = jax.lax.dot_general(pq, vq, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.int32)  # (G, hd)
     vz = jnp.round(vz_ref[...][0]).astype(jnp.int32)
@@ -106,42 +153,60 @@ def _decode_attention_kernel(qp_ref, pos_ref, q_ref, kp_ref, ks_ref, kz_ref,
 def decode_attention(qq: Array, q_z: Array, q_scale: Array,
                      k_planes: Array, k_s: Array, k_z: Array,
                      v_planes: Array, v_s: Array, v_z: Array,
-                     pos: Array, *, window=None, softcap: float = 0.0,
-                     interpret: bool = True) -> Array:
+                     pos: Array, k_pact: Array | None = None,
+                     v_pact: Array | None = None, *, window=None,
+                     softcap: float = 0.0, interpret: bool = True) -> Array:
     """out[b, k, g, :] = softmax-attention of query group (b, k, g) over the
     packed bit-plane KV cache. Argument shapes match
     ``kernels.ref.decode_attention_ref`` exactly (its docstring is the
     spec), except ``pos`` must be a scalar — the engine's caches share one
-    ``length`` across the batch.
+    ``length`` across the batch — and ``k_pact``/``v_pact`` (traced scalar
+    counts of LIVE low planes, from the cache level counts; None = all)
+    have no oracle counterpart because the skipped planes are all-zero.
     """
     b, kh, g, hd = qq.shape
     _, n_planes, s, kh2, d8 = k_planes.shape
     assert kh == kh2 and d8 * 8 == hd, (qq.shape, k_planes.shape)
     assert v_planes.shape == k_planes.shape
     assert n_planes <= CACHE_PLANES, n_planes
+    if k_pact is None:
+        k_pact = jnp.float32(n_planes)
+    if v_pact is None:
+        v_pact = jnp.float32(n_planes)
     qp = jnp.stack([jnp.asarray(q_z, jnp.float32).reshape(()),
-                    jnp.asarray(q_scale, jnp.float32).reshape(())]
-                   ).reshape(1, 2)
+                    jnp.asarray(q_scale, jnp.float32).reshape(()),
+                    jnp.clip(jnp.asarray(k_pact, jnp.float32).reshape(()),
+                             1.0, float(n_planes)),
+                    jnp.clip(jnp.asarray(v_pact, jnp.float32).reshape(()),
+                             1.0, float(n_planes))]).reshape(1, 4)
     pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
 
-    kernel = functools.partial(_decode_attention_kernel, hd=hd,
-                               window=window, softcap=softcap,
+    kernel = functools.partial(_decode_attention_kernel, n_planes=n_planes,
+                               hd=hd, window=window, softcap=softcap,
                                prob_scale=PROB_SCALE)
-    plane_spec = pl.BlockSpec((1, n_planes, s, 1, d8),
-                              lambda bi, ki: (bi, 0, 0, ki, 0))
     row_spec = pl.BlockSpec((1, s), lambda bi, ki: (bi, 0))
     return pl.pallas_call(
         kernel,
         grid=(b, kh),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),           # [q_z, q_scale]
-            pl.BlockSpec(memory_space=pltpu.SMEM),           # pos
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # [q_z, q_scale, pacts]
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos
             pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
-            plane_spec, row_spec, row_spec,                  # K planes/s/z
-            plane_spec, row_spec, row_spec,                  # V planes/s/z
+            pl.BlockSpec(memory_space=pltpu.ANY),    # K planes (manual DMA)
+            row_spec, row_spec,                      # K s/z
+            pl.BlockSpec(memory_space=pltpu.ANY),    # V planes (manual DMA)
+            row_spec, row_spec,                      # V s/z
         ],
         out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((s, hd), jnp.int32),          # accumulated K codes
+            pltpu.VMEM((s, hd), jnp.int32),          # accumulated V codes
+            pltpu.VMEM((2, s, d8), jnp.uint8),       # K plane slots
+            pltpu.VMEM((2, s, d8), jnp.uint8),       # V plane slots
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=interpret,
     )(qp, pos2, qq.astype(jnp.int32), k_planes, k_s, k_z,
       v_planes, v_s, v_z)

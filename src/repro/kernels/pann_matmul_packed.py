@@ -120,23 +120,29 @@ def pann_matmul_packed(x_q: Array, packed_pos: Array, packed_neg: Array,
 # ---------------------------------------------------------------------------
 
 def _act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref, zcol_ref, o_ref,
-                xbuf, codes, pos_buf, neg_buf, acc_ref, xsem, pos_sem,
-                neg_sem, *, n_planes: int, k_steps: int, bk: int):
+                xbuf, codes, pos_buf, neg_buf, w_ref, acc_ref, xsem, pos_sem,
+                neg_sem, *, n_planes: int, k_steps: int, bk: int, depth: int,
+                i_axis: int, j_axis: int, encode_every_step: bool):
     """Packed twin of ``pann_matmul._pann_matmul_act_kernel`` (see its
     docstring for the dataflow): fp32 x is DMA'd + affine-encoded into a
-    persistent VMEM codes panel on the first j pass, and the (bk/8, bn)
-    uint8 plane tiles stream through two VMEM slots with the copy of plane
-    p+1 started before plane p's wait, overlapping transfer with the VPU
-    unpack/shift-add."""
-    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    persistent VMEM codes panel on its first visit, and the (bk/8, bn)
+    uint8 plane tiles stream through ``depth`` VMEM slots with the copy of
+    plane p+depth-1 started before plane p's wait, overlapping transfer
+    with the VPU unpack/shift-add. Planes below the runtime plane_shift
+    scalar (qparams[0, 3]) are dead: no DMA, no unpack, no shift-add."""
+    i, j = pl.program_id(i_axis), pl.program_id(j_axis)
+    kk = pl.program_id(2)
     s = qp_ref[0, 0]
     z = qp_ref[0, 1]
     n_clip = qp_ref[0, 2]
+    if qp_ref.shape == (1, 4):
+        shift = jnp.round(qp_ref[0, 3]).astype(jnp.int32)
+    else:
+        shift = jnp.int32(0)
     bm = xbuf.shape[0]
     bn = o_ref.shape[1]
     shifts = jnp.arange(8, dtype=jnp.uint8)
 
-    @pl.when(j == 0)
     def _encode_panel():
         cp = pltpu.make_async_copy(
             x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)], xbuf, xsem)
@@ -145,6 +151,11 @@ def _act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref, zcol_ref, o_ref,
         # VERBATIM core.quant.affine_encode — change both or neither
         codes[:, pl.ds(kk * bk, bk)] = jnp.clip(
             jnp.round(xbuf[...] / s) + z, 0.0, n_clip).astype(jnp.int8)
+
+    if encode_every_step:
+        _encode_panel()
+    else:
+        pl.when(j == 0)(_encode_panel)
 
     @pl.when(kk == 0)
     def _init():
@@ -161,20 +172,34 @@ def _act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref, zcol_ref, o_ref,
         bits = (tile[:, None, :] >> shifts[None, :, None]) & jnp.uint8(1)
         return bits.reshape(bk, bn).astype(jnp.int8)
 
-    plane_dma(pos_buf, pos_hbm, pos_sem, 0, 0).start()
-    plane_dma(neg_buf, neg_hbm, neg_sem, 0, 0).start()
-    w = jnp.zeros((bk, bn), jnp.int8)
+    # predicated pipeline fill from the first LIVE plane (see pann_matmul)
+    for p0 in range(n_planes):
+        @pl.when(shift == p0)
+        def _fill(p0=p0):
+            for d in range(depth - 1):
+                if p0 + d < n_planes:
+                    plane_dma(pos_buf, pos_hbm, pos_sem,
+                              (p0 + d) % depth, p0 + d).start()
+                    plane_dma(neg_buf, neg_hbm, neg_sem,
+                              (p0 + d) % depth, p0 + d).start()
+
+    w_ref[...] = jnp.zeros_like(w_ref)
     for p in range(n_planes):
-        slot = p % 2
-        if p + 1 < n_planes:
-            plane_dma(pos_buf, pos_hbm, pos_sem, 1 - slot, p + 1).start()
-            plane_dma(neg_buf, neg_hbm, neg_sem, 1 - slot, p + 1).start()
-        plane_dma(pos_buf, pos_hbm, pos_sem, slot, p).wait()
-        plane_dma(neg_buf, neg_hbm, neg_sem, slot, p).wait()
-        w = w + jnp.int8(1 << p) * (unpack(pos_buf[slot])
-                                    - unpack(neg_buf[slot]))
+        @pl.when(p >= shift)
+        def _accum_plane(p=p, slot=p % depth):
+            nxt = p + depth - 1
+            if nxt < n_planes:
+                plane_dma(pos_buf, pos_hbm, pos_sem, nxt % depth,
+                          nxt).start()
+                plane_dma(neg_buf, neg_hbm, neg_sem, nxt % depth,
+                          nxt).start()
+            plane_dma(pos_buf, pos_hbm, pos_sem, slot, p).wait()
+            plane_dma(neg_buf, neg_hbm, neg_sem, slot, p).wait()
+            w_ref[...] += jnp.int8(1 << p) * (unpack(pos_buf[slot])
+                                              - unpack(neg_buf[slot]))
     acc_ref[...] += jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        x, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
 
     @pl.when(kk == k_steps - 1)
     def _done():
@@ -182,52 +207,74 @@ def _act_kernel(qp_ref, x_hbm, pos_hbm, neg_hbm, gamma_ref, zcol_ref, o_ref,
                       * s * gamma_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "depth",
+                                             "grid_order", "interpret"))
 def pann_matmul_packed_act(x: Array, packed_pos: Array, packed_neg: Array,
                            qparams: Array, gamma: Array,
                            zcol: Array | None = None, *, bm: int = 128,
-                           bn: int = 128, bk: int = 128,
+                           bn: int = 128, bk: int = 128, depth: int = 2,
+                           grid_order: str = "mnk",
                            interpret: bool = True) -> Array:
     """Fused-prologue packed-plane matmul: quantize-in-kernel on the
     2*P/8-bytes-per-weight deployment artifact.
 
     x (M, K) f32; packed_pos/neg (P, K/8, N) uint8; K % bk == 0, bk % 8 == 0.
-    qparams (1, 3) f32 SMEM scalars [s, z, n_lvl] (``quant.affine_scale_zp``
-    outside the kernel — the shared cross-backend derivation). zcol (N,)
-    int32: zero-point/bias row, subtracted in the exact int32 accumulator.
+    qparams (1, 4) f32 SMEM scalars [s, z, n_lvl, plane_shift]
+    (``quant.affine_scale_zp`` outside the kernel — the shared
+    cross-backend derivation; plane_shift = LOW planes to skip at runtime,
+    see ``pann_matmul.pann_matmul_act``; (1, 3) accepted = shift 0).
+    zcol (N,) int32: zero-point/bias row, subtracted in the exact int32
+    accumulator. ``depth``/``grid_order`` as in ``pann_matmul_act``.
     """
     m, k = x.shape
     p, k8, n = packed_pos.shape
     assert k8 * 8 == k and bk % 8 == 0
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    assert qparams.shape == (1, 3)
+    assert qparams.shape in ((1, 3), (1, 4)), qparams.shape
+    assert depth >= 2, depth
+    assert grid_order in ("mnk", "nmk"), grid_order
     if zcol is None:
         zcol = jnp.zeros((n,), jnp.int32)
     k_steps = k // bk
+    m_steps, n_steps = m // bm, n // bn
+    if grid_order == "mnk":
+        grid = (m_steps, n_steps, k_steps)
+        i_axis, j_axis = 0, 1
+        nidx = lambda a, b, kk: (0, b)      # noqa: E731
+        oidx = lambda a, b, kk: (a, b)      # noqa: E731
+    else:
+        grid = (n_steps, m_steps, k_steps)
+        i_axis, j_axis = 1, 0
+        nidx = lambda a, b, kk: (0, a)      # noqa: E731
+        oidx = lambda a, b, kk: (b, a)      # noqa: E731
+    encode_every_step = (grid_order == "nmk" and m_steps > 1)
     kernel = functools.partial(_act_kernel, n_planes=p, k_steps=k_steps,
-                               bk=bk)
+                               bk=bk, depth=depth, i_axis=i_axis,
+                               j_axis=j_axis,
+                               encode_every_step=encode_every_step)
     return pl.pallas_call(
         kernel,
-        grid=(m // bm, n // bn, k_steps),
+        grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),       # qparams
             pl.BlockSpec(memory_space=pltpu.ANY),        # x (manual DMA)
             pl.BlockSpec(memory_space=pltpu.ANY),        # packed_pos
             pl.BlockSpec(memory_space=pltpu.ANY),        # packed_neg
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), nidx),
+            pl.BlockSpec((1, bn), nidx),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), oidx),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((bm, bk), jnp.float32),           # fp32 x landing pad
             pltpu.VMEM((bm, k), jnp.int8),               # persistent codes
-            pltpu.VMEM((2, bk // 8, bn), jnp.uint8),     # plane slots (pos)
-            pltpu.VMEM((2, bk // 8, bn), jnp.uint8),     # plane slots (neg)
+            pltpu.VMEM((depth, bk // 8, bn), jnp.uint8),  # plane slots (pos)
+            pltpu.VMEM((depth, bk // 8, bn), jnp.uint8),  # plane slots (neg)
+            pltpu.VMEM((bk, bn), jnp.int8),              # reconstructed w
             pltpu.VMEM((bm, bn), jnp.int32),             # accumulator
             pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
         ],
         interpret=interpret,
     )(qparams, x, packed_pos, packed_neg, gamma.reshape(1, -1),

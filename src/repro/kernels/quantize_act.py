@@ -1,4 +1,13 @@
-"""Pallas TPU kernel: fused per-row (per-token) activation quantization.
+"""Pallas TPU kernel: standalone per-row (per-token) activation quantization.
+
+STATUS: reference oracle only. No serving path calls this kernel anymore —
+every production projection quantizes activations inside the matmul
+prologue (``pann_matmul_act`` / ``pann_matmul_packed_act``), where the fp32
+activations cross HBM once and the codes never do. This kernel is retained
+as the measured BASELINE for that fusion (benchmarks/kernel_bench.py times
+both) and as a parity target for the standalone-quantization tests
+(tests/test_kernels.py); new callers should go through
+``kernels.dispatch.serving_linear`` or ``ops.pann_matmul`` instead.
 
 Computes, in one VMEM pass per row-tile:
     amax[m]  = max(relu(x[m, :]))

@@ -13,10 +13,16 @@ to fp32 tolerance — the train→serve loop closes on numbers, not vibes.
         --quant pann --budget_schedule 0:fp,20:8,60:6 --ckpt_dir /tmp/ck
     python -m repro.launch.export --ckpt_dir /tmp/ck --out /tmp/artifact
 
-The artifact directory uses the checkpoint layout (arrays.npz + meta.json,
-atomic COMMITTED marker) so ``ckpt.checkpoint.restore`` loads it straight
-into a serving tree; ``examples/serve_lm.py`` / the serve engine consume it
-via ``build_variant_cache``-shaped params.
+The ``--out`` artifact directory uses the checkpoint layout (arrays.npz +
+meta.json, atomic COMMITTED marker) so ``ckpt.checkpoint.restore`` loads it
+straight into a serving tree; ``examples/serve_lm.py`` / the serve engine
+consume it via ``build_variant_cache``-shaped params.
+
+``--artifact_out`` additionally writes the mmap-able LADDER artifact
+(``serve_engine.artifact``: manifest.json + weights.bin): one max-budget
+weight store quantized from the same calibrated params, with a zero-copy
+rung view per ``--artifact_ladder`` bit budget — the deployment form whose
+weight HBM is independent of ladder depth (DESIGN.md §11, docs/artifact.md).
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ from repro.launch import steps as ST
 from repro.launch import train as TR
 from repro.launch.mesh import make_local_mesh
 from repro.models import serving
+from repro.serve_engine import artifact
+from repro.serve_engine.ladder import build_ladder
 
 
 def _final_operating_point(cfg, tcfg, targs, step: int):
@@ -60,6 +68,14 @@ def main(argv=None) -> dict:
                     help="checkpoint step to export (default: latest)")
     ap.add_argument("--out", default="",
                     help="write the serving artifact here (ckpt layout)")
+    ap.add_argument("--artifact_out", default="",
+                    help="write the mmap-able ladder weight store here "
+                         "(manifest.json + weights.bin; "
+                         "serve_engine.artifact)")
+    ap.add_argument("--artifact_ladder", default="",
+                    help="comma-separated bit budgets for the artifact's "
+                         "rung views, e.g. 2,4,6 (default: the training "
+                         "run's final operating point alone)")
     ap.add_argument("--tol", type=float, default=1e-3,
                     help="max |exported - training| eval-loss gap "
                          "(relative to the training loss)")
@@ -136,6 +152,28 @@ def main(argv=None) -> dict:
         out_meta["train_args"] = meta["train_args"]
         path = ck.save(args.out, step, variant, meta=out_meta)
         summary["out"] = path
+    if args.artifact_out:
+        # the mmap-able ladder form: quantize ONCE at the max budget, one
+        # zero-copy view per rung (models/serving.build_weight_store)
+        if args.artifact_ladder:
+            lad = build_ladder([int(b) for b in
+                                args.artifact_ladder.split(",")],
+                               d=float(cfg.d_model))
+            specs = {op.bits: (op.tree if op.tree is not None
+                               else (op.r, op.b_x_tilde)) for op in lad}
+        elif tree is not None:
+            specs = {bits: tree}
+        else:
+            specs = {0: (float(uniform_pt[0]),
+                         None if uniform_pt[1] is None
+                         else int(uniform_pt[1]))}
+        ws = serving.build_weight_store(state.params, cfg, specs,
+                                        pack_planes=True, calib=calib)
+        summary["artifact_out"] = artifact.write_artifact(
+            args.artifact_out, ws,
+            meta={"source_ckpt": args.ckpt_dir, "step": step,
+                  "rungs": sorted(specs),
+                  "train_args": meta["train_args"]})
     print("[export] " + json.dumps(summary))
 
     if meta_eval is not None and qat and \

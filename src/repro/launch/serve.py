@@ -77,6 +77,7 @@ def serve_ladder(args) -> dict:
                          backend=args.backend or None,
                          autotune=args.autotune,
                          cache_bits=cache_bits,
+                         artifact_format=args.artifact_format,
                          frontend_kwargs_fn=fe_fn)
     engine.warmup()
     total_macs = sum(m.macs for m in engine.profile)
@@ -164,6 +165,15 @@ def main(argv=None) -> dict:
                          "packed bit-plane cache directly "
                          "(kernels/pann_attention via --backend, jnp ref "
                          "oracle otherwise). Empty = fp cache.")
+    ap.add_argument("--artifact_format", default="views",
+                    choices=["views", "legacy"],
+                    help="ladder materialization (DESIGN.md §11): 'views' "
+                         "quantizes once at the per-module max budget and "
+                         "serves every rung as a zero-copy view over one "
+                         "weight store (HBM flat in ladder depth; rung "
+                         "budgets snapped to powers of two); 'legacy' "
+                         "keeps the per-rung quantizer (exact budgets, "
+                         "N stores) for one release.")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")
@@ -184,6 +194,11 @@ def main(argv=None) -> dict:
         raise SystemExit(
             "--cache_bits requires --power_ladder (the quantized KV cache "
             "rides in the serve-engine variant cache)")
+    if args.artifact_format != "views":
+        raise SystemExit(
+            "--artifact_format selects the LADDER materialization; the "
+            "single-point path has one variant either way — combine it "
+            "with --power_ladder")
 
     cfg = configs.get_config(args.arch)
     if args.reduced:

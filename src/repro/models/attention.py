@@ -378,7 +378,7 @@ def _decode_attend_quant(x: Array, cache: QuantKVCache, p: dict,
         if leaf is not None:
             return jnp.asarray(leaf, jnp.float32).reshape(())
         bits = int(cfg.cache_bits or 8)
-        return jnp.float32(min((1 << bits) - 1, 127))
+        return jnp.float32(quant.cap_levels(bits))
 
     k_nlvl = nlvl(kc.get("k_nlvl"))
     v_nlvl = nlvl(kc.get("v_nlvl"))
@@ -395,7 +395,8 @@ def _decode_attend_quant(x: Array, cache: QuantKVCache, p: dict,
     out = KD.decode_attention(q.reshape(b, cfg.num_heads, hd), view,
                               cfg.kernel_backend or "ref",
                               num_kv_heads=cfg.num_kv_heads, window=window,
-                              softcap=cfg.attn_softcap)
+                              softcap=cfg.attn_softcap,
+                              k_nlvl=k_nlvl, v_nlvl=v_nlvl)
     out = C.constrain_spec(out.astype(x.dtype).reshape(b, 1, -1),
                            {0: batch_ax})
     y = L.project(out, p["wo"], cfg, "attn.wo")

@@ -15,6 +15,7 @@ rungs share one compilation) — the full (b~x, R) operating point.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Mapping, Optional
 
 import jax
@@ -57,6 +58,58 @@ def _planes_artifact(codes, plane_count: int) -> dict:
     for key, half in (("w_planes_pos", pos), ("w_planes_neg", neg)):
         planes = pann_core.bitplane_decompose(half, plane_count)
         out[key] = pack_planes(jnp.moveaxis(planes, 0, -3))
+    return out
+
+
+def _cache_artifact(stack, cache_role_bits, calib) -> dict:
+    """Per-rung KV-cache leaves: level counts + (when the role was
+    calibrated) hoisted quantizer scalars, stack-shaped so scan bodies can
+    slice them. One copy shared by the legacy per-rung quantizer and the
+    weight-store view builder."""
+    out = {}
+    for role, prefix in zip(pol.CACHE_PATHS, ("k", "v")):
+        n_lvl = float(quant_core.cap_levels(cache_role_bits[role]))
+        out[f"{prefix}_nlvl"] = jnp.full(stack, n_lvl, jnp.float32)
+        rng = calib.get(role) if calib else None
+        if rng is not None and float(rng[0]) <= float(rng[1]):
+            lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
+            hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
+            s, z = quant_core.affine_scale_zp(lo, hi, jnp.float32(n_lvl))
+            out[f"{prefix}_s"] = jnp.full(stack, s, jnp.float32)
+            out[f"{prefix}_z"] = jnp.full(stack, z, jnp.float32)
+    return out
+
+
+def _act_leaves(stack, ab, trail, calib) -> dict:
+    """Per-rung activation-quantizer leaves for one projection at b~x=ab:
+    level counts always, frozen range + hoisted (s, z) when calibrated.
+    Shared by the legacy quantizer and the view builder (identical op
+    sequences keep hoisted and derived scalars bit-exact)."""
+    out = {
+        # match the weight's stack dims (e.g. the vmapped group axis) so
+        # scanned decode bodies can slice per group
+        "act_n": jnp.full(stack, float((1 << int(ab)) - 1), jnp.float32),
+        # hoisted kernel-facing level count min(act_n, 127): the decode
+        # step reads the leaf instead of re-deriving the half-range cap
+        # per projection per token (dispatch._act_scalars)
+        "act_nlvl": jnp.full(stack, float(quant_core.cap_levels(int(ab))),
+                             jnp.float32),
+    }
+    if calib:
+        rng = calib.get(pol.serving_path(trail))
+        if rng is not None and float(rng[0]) <= float(rng[1]):
+            out["act_lo"] = jnp.full(stack, float(rng[0]), jnp.float32)
+            out["act_hi"] = jnp.full(stack, float(rng[1]), jnp.float32)
+            # frozen ranges admit build-time (s, z): the SAME f32 op
+            # sequence as the serve-time derivation (quant.act_range_bounds
+            # with a seen range + affine_scale_zp), so hoisted and derived
+            # artifacts stay bit-exact
+            lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
+            hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
+            s, z = quant_core.affine_scale_zp(
+                lo, hi, jnp.float32(quant_core.cap_levels(int(ab))))
+            out["act_s"] = jnp.full(stack, s, jnp.float32)
+            out["act_z"] = jnp.full(stack, z, jnp.float32)
     return out
 
 
@@ -136,19 +189,7 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
             for role in pol.CACHE_PATHS}
 
     def cache_artifact(stack) -> dict:
-        out = {}
-        for role, prefix in zip(pol.CACHE_PATHS, ("k", "v")):
-            n_lvl = float(min((1 << cache_role_bits[role]) - 1, 127))
-            out[f"{prefix}_nlvl"] = jnp.full(stack, n_lvl, jnp.float32)
-            rng = calib.get(role) if calib else None
-            if rng is not None and float(rng[0]) <= float(rng[1]):
-                lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
-                hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
-                s, z = quant_core.affine_scale_zp(lo, hi,
-                                                  jnp.float32(n_lvl))
-                out[f"{prefix}_s"] = jnp.full(stack, s, jnp.float32)
-                out[f"{prefix}_z"] = jnp.full(stack, z, jnp.float32)
-        return out
+        return _cache_artifact(stack, cache_role_bits, calib)
 
     def walk(node, trail=()):
         if isinstance(node, dict):
@@ -181,36 +222,7 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                 if pack_planes:
                     out.update(_planes_artifact(codes, int(p_cnt)))
                 if ab is not None:
-                    # match the weight's stack dims (e.g. the vmapped group
-                    # axis) so scanned decode bodies can slice it per group
-                    stack = w.shape[:-2]
-                    out["act_n"] = jnp.full(stack,
-                                            float((1 << int(ab)) - 1),
-                                            jnp.float32)
-                    # hoisted kernel-facing level count min(act_n, 127):
-                    # the decode step reads the leaf instead of re-deriving
-                    # the half-range cap per projection per token
-                    # (dispatch._act_scalars; 127 = 2^7 - 1 half-range)
-                    n_lvl = float(min((1 << int(ab)) - 1, 127))
-                    out["act_nlvl"] = jnp.full(stack, n_lvl, jnp.float32)
-                    if calib:
-                        rng = calib.get(pol.serving_path(trail))
-                        if rng is not None and float(rng[0]) <= float(rng[1]):
-                            out["act_lo"] = jnp.full(stack, float(rng[0]),
-                                                     jnp.float32)
-                            out["act_hi"] = jnp.full(stack, float(rng[1]),
-                                                     jnp.float32)
-                            # frozen ranges admit build-time (s, z): the
-                            # SAME f32 op sequence as the serve-time
-                            # derivation (quant.act_range_bounds with a
-                            # seen range + affine_scale_zp), so hoisted
-                            # and derived artifacts stay bit-exact
-                            lo = jnp.minimum(jnp.float32(rng[0]), 0.0)
-                            hi = jnp.maximum(jnp.float32(rng[1]), 0.0)
-                            s, z = quant_core.affine_scale_zp(
-                                lo, hi, jnp.float32(n_lvl))
-                            out["act_s"] = jnp.full(stack, s, jnp.float32)
-                            out["act_z"] = jnp.full(stack, z, jnp.float32)
+                    out.update(_act_leaves(w.shape[:-2], ab, trail, calib))
                 if "b" in node:
                     out["b"] = node["b"]
                 return out
@@ -315,3 +327,218 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
             v = jax.device_put(v, shardings)
         cache[key] = v
     return cache
+
+
+# ---------------------------------------------------------------------------
+# Max-R weight store + zero-copy rung views (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WeightStore:
+    """One quantized artifact serving a whole ladder.
+
+    ``store`` holds the big leaves quantized ONCE at each module's maximal
+    budget (w_q codes, packed plane stacks, w_scale = gamma_R, biases,
+    frozen calibration ranges, plus every fp passthrough leaf). ``views``
+    maps each rung key to a decode-ready variant that REFERENCES the store's
+    big leaves (same arrays, same device buffers) and adds only per-rung
+    small leaves: ``plane_shift`` (the dropped-low-plane count the kernels
+    predicate on), the view's ``w_colsum``, the rung's activation-quantizer
+    scalars, and its ``kv_cache`` level counts. Weight HBM is therefore
+    INDEPENDENT of ladder depth — a 5-rung ladder holds one code tensor per
+    module, not five (benchmarks/table14_footprint.py gates this).
+
+    Rung numerics under views are the truncation-consistent scheme: rung
+    codes are the top planes of the max-R codes, so a rung realizes the
+    SNAPPED budget r_max / 2^shift rather than its exactly-planned R
+    (``core.pann.view_shift``; accuracy delta measured at equal power by
+    benchmarks/artifact_parity.py)."""
+    store: Any
+    views: dict
+
+
+def _resolve_point(spec, trail) -> tuple[float, Optional[int]]:
+    """One rung spec -> (R, b~x) for the module at ``trail`` — the same
+    three spellings ``build_variant_cache`` accepts (PolicyTree / (R, b~x) /
+    bare R)."""
+    if isinstance(spec, pol.PolicyTree):
+        mq = spec.lookup(pol.serving_path(trail))
+        return float(mq.r), int(mq.b_x_tilde)
+    if isinstance(spec, tuple):
+        r, ab = spec
+        return float(r), (None if ab is None else int(ab))
+    return float(spec), None
+
+
+def _rung_cache_role_bits(spec, cb: Optional[int]) -> Optional[dict]:
+    """Per-role cache bits of one rung: explicit PolicyTree overrides win,
+    ``cb`` fills the rest; None when the rung keeps the fp cache."""
+    policy_cache = pol.tree_cache_bits(spec) \
+        if isinstance(spec, pol.PolicyTree) else {}
+    if not policy_cache and cb is None:
+        return None
+    default_b = cb if cb is not None else max(policy_cache.values())
+    return {role: int(policy_cache.get(role, default_b))
+            for role in pol.CACHE_PATHS}
+
+
+def build_weight_store(params: Any, cfg: ModelConfig,
+                       r_by_rung: Mapping[Any, Any],
+                       mesh=None, par: Optional[ParallelConfig] = None,
+                       store_dtype=jnp.int8,
+                       pack_planes: bool = False,
+                       calib: Optional[Mapping[str, Any]] = None,
+                       cache_bits: Any = None) -> WeightStore:
+    """Quantize once at the per-module max budget; realize every rung of
+    ``r_by_rung`` as a view over that single store (see ``WeightStore``).
+
+    Accepts the same rung-spec / ``calib`` / ``cache_bits`` spellings as
+    ``build_variant_cache`` and produces views with the legacy variants'
+    pytree structure plus one extra data leaf per projection
+    (``plane_shift``) — all views share avals, so the one-compiled-decode-
+    step invariant holds across mixed weight-rung x cache-rung ladders.
+    Plane leaves (``pack_planes``) are always built at ``LADDER_PLANE_COUNT``
+    so the full truncation envelope is stored.
+
+    With a ``mesh`` the store is device_put ONCE under the training param
+    rules; views then alias the store's device buffers and only their small
+    per-rung leaves are placed separately — the flat-HBM property survives
+    sharding.
+    """
+    if isinstance(cache_bits, Mapping):
+        missing = set(r_by_rung) - set(cache_bits)
+        if missing:
+            raise ValueError(
+                f"cache_bits mapping must cover every rung (missing "
+                f"{sorted(missing)}): rungs with and without kv_cache "
+                "leaves cannot share one pytree structure")
+    if calib:
+        calib = {k: np.asarray(v, np.float32) for k, v in calib.items()}
+    keys = list(r_by_rung)
+    if not keys:
+        raise ValueError("r_by_rung must name at least one rung")
+    rung_cache: dict = {}
+    for key in keys:
+        cb = (cache_bits.get(key) if isinstance(cache_bits, Mapping)
+              else cache_bits)
+        rung_cache[key] = _rung_cache_role_bits(
+            r_by_rung[key], None if cb is None else int(cb))
+    cached = [k for k in keys if rung_cache[k] is not None]
+    if cached and len(cached) != len(keys):
+        raise ValueError(
+            "kv_cache leaves must be all-or-none across rungs: rungs "
+            f"{sorted(set(keys) - set(cached))!r} have no cache bits while "
+            f"{sorted(cached)!r} do")
+
+    def walk(node, trail=()):
+        """Returns (store_node, {rung key: view_node}); passthrough leaves
+        are the SAME object in the store and every view."""
+        if isinstance(node, dict):
+            name = trail[-1] if trail else ""
+            if "w" in node and name in _QUANT_PARENTS \
+                    and getattr(node["w"], "ndim", 0) >= 2:
+                w = node["w"]
+                points = {k: _resolve_point(r_by_rung[k], trail)
+                          for k in keys}
+                r_max = max(r for r, _ in points.values())
+                w_q, gamma = pann_core.pann_quantize(
+                    w.astype(jnp.float32), r_max, axis=w.ndim - 2)
+                codes = jnp.clip(w_q, -127, 127)
+                shared = {
+                    "w_q": codes.astype(store_dtype),
+                    "w_scale": gamma.astype(jnp.float32),
+                }
+                if pack_planes:
+                    shared.update(
+                        _planes_artifact(codes, LADDER_PLANE_COUNT))
+                if "b" in node:
+                    shared["b"] = node["b"]
+                stack = w.shape[:-2]
+                views = {}
+                for k in keys:
+                    r_mod, ab = points[k]
+                    sh = pann_core.view_shift(r_max, r_mod,
+                                              LADDER_PLANE_COUNT - 1)
+                    masked = pann_core.masked_codes(codes, sh)
+                    v = dict(shared)
+                    v["plane_shift"] = jnp.full(stack, float(sh),
+                                                jnp.float32)
+                    # the view's zero-point row: colsum of the codes the
+                    # plane-skipping kernels REALIZE, not the stored ones
+                    v["w_colsum"] = jnp.sum(masked, axis=-2)
+                    if ab is not None:
+                        v.update(_act_leaves(stack, ab, trail, calib))
+                    views[k] = v
+                return shared, views
+            pairs = {k2: walk(v, trail + (k2,)) for k2, v in node.items()}
+            store_n = {k2: p[0] for k2, p in pairs.items()}
+            view_n = {k: {k2: p[1][k] for k2, p in pairs.items()}
+                      for k in keys}
+            if (cached and name in ("attn", "shared_attn") and "wk" in node
+                    and isinstance(node["wk"], dict) and "w" in node["wk"]):
+                stack = node["wk"]["w"].shape[:-2]
+                for k in keys:
+                    view_n[k]["kv_cache"] = _cache_artifact(
+                        stack, rung_cache[k], calib)
+            return store_n, view_n
+        if isinstance(node, list):
+            pairs = [walk(v, trail) for v in node]
+            return ([p[0] for p in pairs],
+                    {k: [p[1][k] for p in pairs] for k in keys})
+        if isinstance(node, tuple):
+            pairs = [walk(v, trail) for v in node]
+            return (tuple(p[0] for p in pairs),
+                    {k: tuple(p[1][k] for p in pairs) for k in keys})
+        return node, {k: node for k in keys}
+
+    store, view_trees = walk(params)
+    if mesh is not None:
+        store_dev = jax.device_put(store,
+                                   variant_shardings(store, mesh, par))
+        relink = {id(h): d for h, d in
+                  zip(jax.tree_util.tree_leaves(store),
+                      jax.tree_util.tree_leaves(store_dev))}
+
+        def put(x, s):
+            hit = relink.get(id(x))
+            return hit if hit is not None else jax.device_put(x, s)
+
+        shardings = None
+        out_views = {}
+        for k, vt in view_trees.items():
+            if shardings is None:     # views share avals: compute once
+                shardings = variant_shardings(vt, mesh, par)
+            out_views[k] = jax.tree_util.tree_map(put, vt, shardings)
+        return WeightStore(store=store_dev, views=out_views)
+    return WeightStore(store=store, views=view_trees)
+
+
+def materialize_view(view: Any) -> Any:
+    """Copy one rung view out into a standalone legacy-format variant:
+    ``w_q`` becomes the masked codes the plane-skipping kernels realize
+    (``core.pann.masked_codes``), plane leaves are re-packed from them, and
+    the ``plane_shift`` leaf is dropped. Same gamma_R scale, same bias grid,
+    same integer dataflow — the decode outputs are bit-identical to running
+    the view itself, which tests/test_artifact.py asserts per module and
+    per backend."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "w_q" in node and "plane_shift" in node:
+                sh = jnp.asarray(node["plane_shift"],
+                                 jnp.int32).reshape(-1)[0]
+                masked = pann_core.masked_codes(node["w_q"], sh)
+                out = {k: v for k, v in node.items() if k != "plane_shift"}
+                out["w_q"] = masked.astype(node["w_q"].dtype)
+                out["w_colsum"] = jnp.sum(masked, axis=-2)
+                if "w_planes_pos" in node:
+                    out.update(
+                        _planes_artifact(masked, LADDER_PLANE_COUNT))
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(view)

@@ -9,17 +9,24 @@ package turns that claim into a serving runtime:
               unsigned-MAC budgets by default) from ``planner.plan_ladder``
   scheduler   continuous-batching request scheduler that picks the rung per
               request from a declared power budget or accuracy floor
-  engine      ``ServeEngine``: one bf16 checkpoint in, a cached int8
-              weight-code variant per rung (models/serving.py), ONE jitted
-              decode step shared by every rung, per-token bit-flip
-              accounting in every response
+  engine      ``ServeEngine``: one bf16 checkpoint in, ONE max-budget
+              weight store with a zero-copy view per rung
+              (models/serving.build_weight_store; artifact_format="legacy"
+              keeps the per-rung variant cache), ONE jitted decode step
+              shared by every rung, per-token bit-flip accounting in every
+              response
+  artifact    the mmap-able on-disk form of the weight store
+              (manifest.json + weights.bin; docs/artifact.md)
 
-Design notes live in DESIGN.md §6; the end-to-end traversal benchmark is
-``benchmarks/serve_traversal.py``.
+Design notes live in DESIGN.md §6 and §11; the end-to-end traversal
+benchmark is ``benchmarks/serve_traversal.py``.
 """
+from repro.serve_engine.artifact import (ArtifactError, load_artifact,
+                                         write_artifact)
 from repro.serve_engine.engine import ServeEngine
 from repro.serve_engine.ladder import OperatingPoint, build_ladder, select_rung
 from repro.serve_engine.scheduler import Request, Response, Scheduler
 
 __all__ = ["ServeEngine", "OperatingPoint", "build_ladder", "select_rung",
-           "Request", "Response", "Scheduler"]
+           "Request", "Response", "Scheduler", "ArtifactError",
+           "load_artifact", "write_artifact"]

@@ -1,0 +1,210 @@
+"""The mmap-able serving artifact: one weight store, zero-copy rung views.
+
+On-disk layout (one directory):
+
+    manifest.json   — magic, version, per-leaf {dtype, shape, offset,
+                      nbytes} records, and the per-rung view tables
+    weights.bin     — every array back to back, 64-byte-aligned offsets
+
+``write_artifact`` persists a ``models.serving.WeightStore``;
+``load_artifact`` maps ``weights.bin`` ONCE (``np.memmap``) and hands every
+leaf out as a view into that single mapping — no Python-side copy, however
+many rungs the ladder has. View leaves that alias the store in memory
+(the big w_q / plane / scale leaves) are stored once and recorded as
+``{"ref": <store path>}`` in the manifest; loading resolves the ref back to
+the SAME mmap view, so the on-disk artifact and the loaded tree both stay
+flat in ladder depth (DESIGN.md §11, benchmarks/table14_footprint.py).
+
+Leaf paths use the checkpoint convention (``ckpt.checkpoint``): "/"-joined
+dict keys, ``#i`` for sequence positions — an artifact is greppable next to
+a checkpoint. The manifest is written LAST, so a directory with a readable
+manifest is complete; a truncated or doctored blob fails ``load_artifact``
+with ``ArtifactError`` (size and bounds checks), never with garbage
+weights. Version history: v1 — initial schema.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import _key_str
+from repro.models.serving import WeightStore
+
+ARTIFACT_MAGIC = "repro-pann-weight-store"
+ARTIFACT_VERSION = 1
+MANIFEST = "manifest.json"
+BLOB = "weights.bin"
+_ALIGN = 64
+
+
+class ArtifactError(ValueError):
+    """Unreadable, foreign-version, or corrupt serving artifact."""
+
+
+def _flatten(tree: Any) -> list[tuple[str, Any]]:
+    return [("/".join(_key_str(k) for k in path), leaf)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def _unflatten(flat: dict) -> Any:
+    """Rebuild nested dicts/lists from "/"-joined paths (#i = list index)."""
+    root: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+
+    def listify(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                return [listify(node[f"#{i}"]) for i in range(len(node))]
+            return {k: listify(v) for k, v in node.items()}
+        return node
+
+    return listify(root)
+
+
+def write_artifact(directory: str, ws: WeightStore, meta: dict | None = None
+                   ) -> str:
+    """Persist a weight store + its rung views; returns the directory.
+
+    Rung keys must be JSON scalars (the engine's are bit widths). The blob
+    is written first and the manifest last, so readers never observe a
+    manifest without its bytes; the manifest itself is replaced atomically.
+    """
+    os.makedirs(directory, exist_ok=True)
+    chunks: list[bytes] = []
+    offset = 0
+
+    def add(leaf) -> dict:
+        nonlocal offset
+        arr = np.asarray(jax.device_get(leaf))
+        pad = -offset % _ALIGN
+        if pad:
+            chunks.append(b"\0" * pad)
+            offset += pad
+        # record the shape BEFORE any contiguity copy: ascontiguousarray
+        # promotes 0-d scalars to 1-d (tobytes is layout-identical either
+        # way, but the manifest must reproduce the leaf's true aval)
+        ent = {"dtype": arr.dtype.name, "shape": list(arr.shape),
+               "offset": offset, "nbytes": int(arr.nbytes)}
+        arr = np.ascontiguousarray(arr)
+        chunks.append(arr.tobytes())
+        offset += arr.nbytes
+        return ent
+
+    store_flat = _flatten(ws.store)
+    id2path = {id(leaf): path for path, leaf in store_flat}
+    store_entries = {path: add(leaf) for path, leaf in store_flat}
+    views = []
+    for key, view in ws.views.items():
+        leaves = {}
+        for path, leaf in _flatten(view):
+            ref = id2path.get(id(leaf))
+            leaves[path] = {"ref": ref} if ref is not None else add(leaf)
+        views.append({"key": key, "leaves": leaves})
+
+    manifest = {
+        "magic": ARTIFACT_MAGIC,
+        "version": ARTIFACT_VERSION,
+        "blob": BLOB,
+        "blob_bytes": offset,
+        "store": store_entries,
+        "views": views,
+        "meta": meta or {},
+    }
+    with open(os.path.join(directory, BLOB), "wb") as f:
+        for c in chunks:
+            f.write(c)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(directory, MANIFEST))
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return directory
+
+
+def load_artifact(directory: str) -> WeightStore:
+    """mmap ``weights.bin`` once; return the store + views as zero-copy
+    numpy views into that mapping (view leaves marked ``ref`` resolve to
+    the SAME objects as the store's). Raises ``ArtifactError`` on a
+    missing/corrupt manifest, a foreign version, or a blob whose size or
+    leaf bounds disagree with the manifest."""
+    try:
+        with open(os.path.join(directory, MANIFEST)) as f:
+            m = json.load(f)
+    except OSError as e:
+        raise ArtifactError(f"no readable {MANIFEST} in {directory}: {e}")
+    except ValueError as e:
+        raise ArtifactError(f"corrupt {MANIFEST} in {directory}: {e}")
+    if m.get("magic") != ARTIFACT_MAGIC:
+        raise ArtifactError(f"not a serving artifact: magic "
+                            f"{m.get('magic')!r}")
+    if m.get("version") != ARTIFACT_VERSION:
+        raise ArtifactError(
+            f"artifact version {m.get('version')!r} not supported by this "
+            f"loader (wants {ARTIFACT_VERSION})")
+    blob_path = os.path.join(directory, m.get("blob", BLOB))
+    try:
+        size = os.path.getsize(blob_path)
+    except OSError as e:
+        raise ArtifactError(f"missing blob {blob_path}: {e}")
+    if size != m["blob_bytes"]:
+        raise ArtifactError(
+            f"blob size mismatch: {size} bytes on disk vs "
+            f"{m['blob_bytes']} in the manifest (truncated artifact?)")
+    mm = np.memmap(blob_path, dtype=np.uint8, mode="r")
+
+    def leaf_of(path: str, ent: dict):
+        off, n = int(ent["offset"]), int(ent["nbytes"])
+        if off < 0 or off + n > mm.size:
+            raise ArtifactError(
+                f"leaf {path!r} spans [{off}, {off + n}) outside the "
+                f"{mm.size}-byte blob")
+        try:
+            return (mm[off:off + n].view(np.dtype(ent["dtype"]))
+                    .reshape(ent["shape"]))
+        except (TypeError, ValueError) as e:
+            raise ArtifactError(f"leaf {path!r} unreadable: {e}")
+
+    store_leaves = {p: leaf_of(p, e) for p, e in m["store"].items()}
+    views = {}
+    for v in m["views"]:
+        leaves = {}
+        for p, e in v["leaves"].items():
+            if "ref" in e:
+                if e["ref"] not in store_leaves:
+                    raise ArtifactError(
+                        f"view leaf {p!r} refs unknown store path "
+                        f"{e['ref']!r}")
+                leaves[p] = store_leaves[e["ref"]]
+            else:
+                leaves[p] = leaf_of(p, e)
+        views[v["key"]] = _unflatten(leaves)
+    return WeightStore(store=_unflatten(store_leaves), views=views)
+
+
+def read_meta(directory: str) -> dict:
+    """The manifest's metadata block (validates magic/version)."""
+    try:
+        with open(os.path.join(directory, MANIFEST)) as f:
+            m = json.load(f)
+    except (OSError, ValueError) as e:
+        raise ArtifactError(f"no readable {MANIFEST} in {directory}: {e}")
+    if m.get("magic") != ARTIFACT_MAGIC or \
+            m.get("version") != ARTIFACT_VERSION:
+        raise ArtifactError("not a loadable serving artifact")
+    return dict(m.get("meta", {}))

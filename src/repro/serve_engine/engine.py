@@ -55,6 +55,7 @@ class ServeEngine:
                  backend: Optional[str] = None,
                  autotune: bool = False,
                  cache_bits: Any = None,
+                 artifact_format: str = "views",
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
@@ -127,14 +128,36 @@ class ServeEngine:
         # LADDER_PLANE_COUNT keeps plane avals identical across rungs
         needs_planes = (backend is not None
                         and dispatch.parse_backend(backend)[0] == "packed")
-        self.variants = serving.build_variant_cache(
-            params, cfg,
-            {op.bits: (op.tree if op.tree is not None
-                       else (op.r, op.b_x_tilde))
-             for op in self.ladder}, mesh=mesh, par=par,
-            pack_planes=needs_planes,
-            plane_count=serving.LADDER_PLANE_COUNT if needs_planes else None,
-            cache_bits=self._cache_bits_by_rung or None)
+        rung_specs = {op.bits: (op.tree if op.tree is not None
+                                else (op.r, op.b_x_tilde))
+                      for op in self.ladder}
+        # artifact_format picks how the ladder is materialized (DESIGN.md
+        # §11): "views" (default) quantizes ONCE at the per-module max
+        # budget and realizes every rung as a zero-copy view over that one
+        # weight store — HBM independent of ladder depth, rung budgets
+        # snapped to powers of two of the top rung; "legacy" keeps the
+        # per-rung quantizer (exact planned budgets, N stores) for one
+        # release while benchmarks/artifact_parity.py tracks the gap.
+        if artifact_format not in ("views", "legacy"):
+            raise ValueError(
+                f"artifact_format must be 'views' or 'legacy', "
+                f"got {artifact_format!r}")
+        self.artifact_format = artifact_format
+        if artifact_format == "views":
+            ws = serving.build_weight_store(
+                params, cfg, rung_specs, mesh=mesh, par=par,
+                pack_planes=needs_planes,
+                cache_bits=self._cache_bits_by_rung or None)
+            self.weight_store = ws.store
+            self.variants = ws.views
+        else:
+            self.weight_store = None
+            self.variants = serving.build_variant_cache(
+                params, cfg, rung_specs, mesh=mesh, par=par,
+                pack_planes=needs_planes,
+                plane_count=(serving.LADDER_PLANE_COUNT if needs_planes
+                             else None),
+                cache_bits=self._cache_bits_by_rung or None)
         # offline block autotuning (kernels/autotune): measure-and-cache the
         # best Pallas block shapes per projection BEFORE the decode step is
         # ever traced — serving_linear then reads the cache at trace time,
@@ -425,6 +448,7 @@ class ServeEngine:
         total_macs = sum(m.macs for m in self.profile)
         return {
             "allocation": self.allocation,
+            "artifact_format": self.artifact_format,
             "backend": self.backend or "legacy",
             "cache_bits": self.cache_bits,
             "cache_bits_by_rung": dict(self._cache_bits_by_rung) or None,

@@ -177,7 +177,8 @@ def test_record_persists_and_survives_process_cache_drop(tmp_cache):
     on_disk = json.loads(tmp_cache.read_text())
     assert on_disk["version"] == autotune.CACHE_VERSION
     key = autotune.cache_key(8, 64, 32, 7, "fused")
-    assert on_disk["blocks"][key] == [8, 32, 64]
+    assert on_disk["blocks"][key] == {"blocks": [8, 32, 64], "depth": 2,
+                                      "order": "mnk"}
 
 
 def test_corrupt_or_foreign_cache_is_ignored(tmp_cache):
@@ -196,7 +197,8 @@ def test_tune_off_tpu_records_heuristic_and_short_circuits(tmp_cache):
     calls = []
     best = autotune.tune(4, 128, 64, 7, "fused",
                          runner=lambda b: calls.append(b) or 1.0)
-    assert best == autotune.heuristic_blocks(4, 64, 128, 7)
+    assert best == autotune.heuristic_params(4, 64, 128, 7)
+    assert best.blocks == autotune.heuristic_blocks(4, 64, 128, 7)
     assert calls == []          # off-TPU: never timed, emulator noise
     # cached entry short-circuits without consulting the runner either
     assert autotune.tune(4, 128, 64, 7, "fused",

@@ -92,3 +92,64 @@ def test_gate_off_tpu_skips_timing_but_asserts_invariants():
     record = roofline.gate(check=True)  # CPU container: must not raise
     assert "skipped" in record and record["failures"] == []
     assert record["thresholds"] == roofline.GATE_THRESHOLDS
+
+
+# ---------------------------------------------------------------------------
+# $REPRO_ROOFLINE_FLOORS override (docs/kernels.md "Re-measuring the
+# roofline floors")
+# ---------------------------------------------------------------------------
+
+def test_floors_default_without_env(monkeypatch):
+    monkeypatch.delenv(roofline.FLOORS_ENV, raising=False)
+    floors = roofline.gate_thresholds()
+    assert floors == roofline.GATE_THRESHOLDS
+    # a fresh dict, not the module constant — callers can't mutate defaults
+    assert floors is not roofline.GATE_THRESHOLDS
+
+
+def test_floors_env_override_merges_over_defaults(monkeypatch):
+    monkeypatch.setenv(roofline.FLOORS_ENV, '{"fused": 0.25}')
+    floors = roofline.gate_thresholds()
+    assert floors["fused"] == 0.25
+    assert floors["packed"] == roofline.GATE_THRESHOLDS["packed"]
+
+
+@pytest.mark.parametrize("bad", [
+    "not json",                      # invalid JSON
+    "[0.2, 0.1]",                    # not an object
+    '{"fused": 0.2, "nope": 0.1}',   # unknown backend
+    '{"fused": 1.5}',                # floor outside (0, 1)
+    '{"fused": 0.0}',                # zero disables the gate silently
+    '{"fused": "0.2"}',              # string, not a number
+    '{"fused": true}',               # bool is not a fraction
+])
+def test_floors_env_rejects_garbage_loudly(monkeypatch, bad):
+    monkeypatch.setenv(roofline.FLOORS_ENV, bad)
+    with pytest.raises(SystemExit) as ei:
+        roofline.gate_thresholds()
+    assert roofline.FLOORS_ENV in str(ei.value)
+
+
+def test_gate_enforces_overridden_floor(monkeypatch):
+    """A floor raised via the env var must actually tighten the gate: a
+    measurement that clears the committed default but not the override
+    fails."""
+    monkeypatch.setattr(kops, "on_tpu", lambda: True)
+    default = roofline.GATE_THRESHOLDS["fused"]
+    monkeypatch.setenv(roofline.FLOORS_ENV,
+                       '{"fused": %s}' % (default + 0.10))
+    fractions = {b: f + 0.01 for b, f in roofline.GATE_THRESHOLDS.items()}
+    monkeypatch.setattr(roofline, "_gate_measurements",
+                        lambda: _synthetic_measurements(fractions))
+    record = roofline.gate(check=False)
+    assert record["floors_overridden_via"] == roofline.FLOORS_ENV
+    assert record["thresholds"]["fused"] == pytest.approx(default + 0.10)
+    assert len(record["failures"]) == 1 and "fused" in record["failures"][0]
+    with pytest.raises(SystemExit):
+        roofline.gate(check=True)
+    # and a loosened floor lets a below-default measurement through
+    monkeypatch.setenv(roofline.FLOORS_ENV, '{"packed": 0.01}')
+    fractions = {b: f + 0.01 for b, f in roofline.GATE_THRESHOLDS.items()}
+    fractions["packed"] = 0.02
+    record = roofline.gate(check=True)
+    assert record["failures"] == []
