@@ -1,0 +1,274 @@
+"""Fleet-sim benchmark: multi-host serving under a global power cap.
+
+Boots a ``repro.serve_engine.fleet.Fleet`` (>= 4 rung-sharded decode hosts
+plus a prefill host, all serving zero-copy views of ONE mmap artifact) and
+drives it with the deterministic synthetic traffic trace: seeded bursty
+arrivals with mixed budgets and SLO floors, a mid-run step of the GLOBAL
+Gbit-flips/sec cap, and a host kill absorbed by ``dist.fault`` — then
+verifies every served wave bit-for-bit against an uninterrupted
+single-engine replay.
+
+    PYTHONPATH=src python benchmarks/fleet_sim.py --reduced --check
+    PYTHONPATH=src python benchmarks/fleet_sim.py --reduced --scale 4
+
+``--check`` gates against benchmarks/baselines/fleet_sim.json:
+
+  * requests served and realized fleet Gbit-flips (from EnergyLedger
+    telemetry aggregated across hosts) must match the baseline EXACTLY —
+    both are analytic functions of the seeded trace (greedy decode always
+    emits a request's full token quota; prices are closed-form), so any
+    drift is a scheduling/accounting change, not noise;
+  * cap violations must be ZERO (the per-tick grant makes this structural);
+  * the host kill must have been absorbed (>= 1 restart) and every stream
+    must replay bit-identically (``verify_streams``);
+  * every host keeps ONE compiled decode step across governor replans
+    (``assert_no_recompile``).
+
+Wall-clock latency/throughput ride along as informational fields only.
+``--scale N`` multiplies the trace length (nightly runs a larger scale and
+appends a point to the committed BENCH_fleet.json via ``--trajectory``).
+Refresh the baseline by copying benchmarks/results/fleet_sim.json over it
+when the fleet legitimately changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import common  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.configs.base import QuantConfig  # noqa: E402
+from repro.models import model as MD  # noqa: E402
+from repro.serve_engine import artifact as afct  # noqa: E402
+from repro.serve_engine.engine import ServeEngine  # noqa: E402
+from repro.serve_engine.fleet import (Fleet, FleetConfig,  # noqa: E402
+                                      TrafficSpec, make_trace,
+                                      verify_streams)
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "fleet_sim.json")
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_fleet.json")
+
+# EXACT-gated result fields: deterministic functions of the seeded trace
+# (token COUNTS and analytic prices — platform- and version-independent)
+EXACT_FIELDS = ("served", "realized_gbitflips", "decode_tokens",
+                "cap_violations", "host_restarts", "migrations",
+                "slo_violations")
+
+
+def run(args) -> dict:
+    cfg = configs.get_config(args.arch, quant=QuantConfig(mode="none"))
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    fc = FleetConfig(
+        n_decode_hosts=args.hosts,
+        n_prefill_hosts=1,
+        ladder_bits=tuple(int(b) for b in args.ladder.split(",")),
+        cap_gbitflips_per_s=args.cap,
+        tick_seconds=1.0,
+        control_interval=3,
+        max_batch=args.batch,
+        max_len=args.prompt_len + max(args.gen_long, args.gen_short) + 2,
+        drain_tick_factor=16,
+    )
+    n_ticks = args.base_ticks * args.scale
+    spec = TrafficSpec(
+        seed=args.seed + 7,
+        n_ticks=n_ticks,
+        burst_prob=0.7,
+        mean_burst=2.0,
+        prompt_lens=(args.prompt_len,),
+        gen_tokens=(args.gen_short, args.gen_long),
+        budget_mix=(2, 4, 6, 6),
+        slo_prob=0.3,
+        slo_bits=(4,),
+        # mid-run GLOBAL cap step (drops the governor's rung ceiling) and a
+        # decode-host kill mid-decode (absorbed by dist.fault)
+        budget_steps=((n_ticks // 2, args.cap_step),),
+        host_kills=((n_ticks // 3, 1),),
+    )
+
+    art_dir = args.artifact_dir or tempfile.mkdtemp(prefix="fleet_sim_")
+    t0 = time.monotonic()
+    fleet = Fleet(cfg, fc, art_dir, params=params)
+    build_s = time.monotonic() - t0
+    trace = make_trace(spec, cfg.vocab_size, fleet.ladder)
+
+    report = fleet.run(trace)
+    fleet.assert_no_recompile()      # one jitted step per host, governed
+
+    # the fleet-scope bit-exactness oracle: every wave (restarted, switched
+    # or untouched) must equal ONE uninterrupted engine on the same artifact
+    ref = ServeEngine(cfg, weight_store=afct.load_artifact(art_dir),
+                      ladder_bits=fc.ladder_bits, max_batch=fc.max_batch,
+                      max_len=fc.max_len)
+    ref.warmup()
+    mismatches = verify_streams(report, ref)
+
+    out = {
+        "arch": cfg.name,
+        "reduced": bool(args.reduced),
+        "platform": jax.devices()[0].platform,
+        "scale": args.scale,
+        "hosts": report["hosts"],
+        "trace": {
+            "seed": spec.seed, "n_ticks": spec.n_ticks,
+            "requests": trace.n_requests,
+            "cap_gbitflips_per_s": args.cap,
+            "cap_step": [n_ticks // 2, args.cap_step],
+            "host_kill": [n_ticks // 3, 1],
+        },
+        # EXACT-gated
+        "served": report["served"],
+        "realized_gbitflips": report["realized_gbitflips"],
+        "decode_tokens": report["decode_tokens"],
+        "cap_violations": report["cap_violations"],
+        "host_restarts": report["host_restarts"],
+        "migrations": report["migrations"],
+        "slo_violations": report["slo_violations"],
+        "verify_mismatches": mismatches,
+        # trajectory / context
+        "ticks": report["ticks"],
+        "rung_token_histogram": report["rung_token_histogram"],
+        "governor_replans": len(report["governor"]["replans"]),
+        "final_ceiling_bits": report["governor"]["ceiling_bits"],
+        "prefill_gbitflips": report["prefill_gbitflips"],
+        "decode_gbitflips": report["decode_gbitflips"],
+        # informational (wall clock — never gated)
+        "wall_s": report["wall_s"],
+        "build_s": round(build_s, 3),
+        "latency_ticks_p50": report["latency_ticks_p50"],
+        "ttft_ticks_p50": report["ttft_ticks_p50"],
+        "straggler_steps": report["straggler_steps"],
+    }
+    common.emit("fleet_sim/run", report["wall_s"] * 1e6,
+                f"served={out['served']} "
+                f"gflips={out['realized_gbitflips']:.4f} "
+                f"restarts={out['host_restarts']}")
+    path = common.save_json("fleet_sim.json", out)
+    print(f"[fleet_sim] wrote {path}")
+    return out
+
+
+def check_result(result: dict, baseline_path: str = BASELINE) -> list[str]:
+    """Hard gates: structural invariants always; EXACT baseline fields at
+    the baseline's scale only (a --scale override changes the trace)."""
+    failures = []
+    if result["hosts"]["decode"] < 4:
+        failures.append(f"fleet ran {result['hosts']['decode']} decode "
+                        f"hosts; the gate requires >= 4")
+    if result["cap_violations"] != 0:
+        failures.append(f"{result['cap_violations']} tick(s) exceeded the "
+                        f"global power cap (must be 0)")
+    if result["host_restarts"] < 1:
+        failures.append("the scheduled host kill was not absorbed "
+                        "(0 restarts recorded)")
+    for m in result["verify_mismatches"]:
+        failures.append(f"bit-exactness: {m}")
+    with open(baseline_path) as f:
+        base = json.load(f)
+    if result["scale"] != base["scale"]:
+        print(f"[fleet_sim] scale {result['scale']} != baseline scale "
+              f"{base['scale']}; EXACT fields not compared")
+        return failures
+    for key in EXACT_FIELDS:
+        if result[key] != base[key]:
+            failures.append(f"{key}: {result[key]!r} != baseline "
+                            f"{base[key]!r} (EXACT); if intended, refresh "
+                            f"{baseline_path}")
+    return failures
+
+
+def _load_trajectory(path: str = TRAJECTORY) -> dict:
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if isinstance(data.get("points"), list):
+                return data
+        except (json.JSONDecodeError, OSError):
+            pass
+    return {"schema": 1,
+            "note": "fleet-sim trajectory; appended by "
+                    "benchmarks/fleet_sim.py --trajectory in nightly CI. "
+                    "served/gbitflips are exact per scale; wall_s and "
+                    "latency are advisory.",
+            "points": []}
+
+
+def append_trajectory(result: dict, path: str = TRAJECTORY) -> str:
+    traj = _load_trajectory(path)
+    traj["points"].append({
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "platform": result["platform"],
+        "scale": result["scale"],
+        "served": result["served"],
+        "realized_gbitflips": result["realized_gbitflips"],
+        "ticks": result["ticks"],
+        "wall_s": result["wall_s"],
+        "latency_ticks_p50": result["latency_ticks_p50"],
+        "host_restarts": result["host_restarts"],
+        "migrations": result["migrations"],
+    })
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+    print(f"[fleet_sim] trajectory point {len(traj['points'])} -> {path}")
+    return path
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--hosts", type=int, default=4,
+                    help="decode hosts (+1 prefill host)")
+    ap.add_argument("--ladder", default="2,4,6")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt_len", type=int, default=6)
+    ap.add_argument("--gen_short", type=int, default=6)
+    ap.add_argument("--gen_long", type=int, default=10)
+    ap.add_argument("--cap", type=float, default=0.25,
+                    help="global cap, Gbit-flips/sec")
+    ap.add_argument("--cap_step", type=float, default=0.035,
+                    help="mid-run global cap step target")
+    ap.add_argument("--base_ticks", type=int, default=12)
+    ap.add_argument("--scale", type=int, default=1,
+                    help="trace length multiplier (nightly runs > 1; "
+                         "EXACT baseline fields gate at scale 1 only)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--artifact_dir", default=None,
+                    help="reuse/persist the serving artifact here")
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed baseline snapshot")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="append this run to the committed BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    result = run(args)
+    if args.trajectory:
+        append_trajectory(result)
+    if args.check:
+        failures = check_result(result)
+        if failures:
+            for f in failures:
+                print(f"[fleet_sim] REGRESSION: {f}")
+            raise SystemExit(1)
+        print("[fleet_sim] baseline check passed")
+    return result
+
+
+if __name__ == "__main__":
+    main()

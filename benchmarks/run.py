@@ -1,30 +1,99 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: the full suite, and the ONE CI gate entry point.
 
-Prints ``name,us_per_call,derived`` CSV lines and writes JSON artifacts to
-benchmarks/results/.  ``--fast`` shortens the trained-model benchmarks.
+Two modes:
+
+  * ``python benchmarks/run.py`` — the full nightly suite: one module per
+    paper table/figure plus every end-to-end benchmark (kernels, roofline,
+    serving traversal, artifact parity, training smoke, fleet sim).
+    Prints ``name,us_per_call,derived`` CSV lines and writes JSON
+    artifacts to benchmarks/results/. ``--fast`` shortens the trained
+    benchmarks; ``--only a,b`` selects jobs.
+
+  * ``python benchmarks/run.py --ci-gates`` — the deduplicated CI gate
+    runner: every baseline-gated ``--check`` benchmark as a subprocess
+    (each with PYTHONPATH=src:. so the workflows carry no per-step env
+    boilerplate), one PASS/FAIL summary table at the end, nonzero exit if
+    any gate failed. ``--gates`` selects a subset (train-smoke CI runs
+    ``--ci-gates --gates train_bench``); the default set is everything
+    the tier-1 workflow gates.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
+import time
 import traceback
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="fewer training steps for the accuracy tables")
-    ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
-    args = ap.parse_args()
+# every baseline-gated benchmark, by name: argv after the interpreter.
+# Order matters: cheap structural gates first, trained/simulated ones last.
+GATES: dict[str, list[str]] = {
+    "kernel_bench": ["benchmarks/kernel_bench.py", "--check"],
+    "roofline": ["benchmarks/roofline.py", "--check"],
+    "serve_traversal": ["benchmarks/serve_traversal.py", "--reduced",
+                        "--check"],
+    "serve_traversal_layerwise": ["benchmarks/serve_traversal.py",
+                                  "--reduced", "--check",
+                                  "--allocation", "layerwise"],
+    "table14_footprint": ["benchmarks/table14_footprint.py", "--reduced",
+                          "--check"],
+    "artifact_parity": ["benchmarks/artifact_parity.py", "--check"],
+    "fleet_sim": ["benchmarks/fleet_sim.py", "--reduced", "--check"],
+    "train_bench": ["benchmarks/train_bench.py", "--check"],
+}
+
+# what `--ci-gates` runs by default == what the tier-1 workflow gates on
+# every PR. train_bench rides in its own CI job (it trains a model), so it
+# is selectable but not default.
+DEFAULT_CI_GATES = ("kernel_bench", "roofline", "serve_traversal",
+                    "serve_traversal_layerwise", "table14_footprint",
+                    "artifact_parity", "fleet_sim")
+
+
+def run_ci_gates(names, fleet_scale: int = 1) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", ".", env.get("PYTHONPATH")) if p)
+    rows = []
+    for name in names:
+        argv = list(GATES[name])
+        if name == "fleet_sim" and fleet_scale != 1:
+            argv += ["--scale", str(fleet_scale)]
+        print(f"\n=== gate: {name}: {' '.join(argv)}", flush=True)
+        t0 = time.monotonic()
+        rc = subprocess.run([sys.executable] + argv, cwd=REPO,
+                            env=env).returncode
+        rows.append((name, rc, time.monotonic() - t0))
+    width = max(len(n) for n, _, _ in rows)
+    print("\n=== CI gate summary")
+    print(f"{'gate'.ljust(width)}  result  seconds")
+    for name, rc, dt in rows:
+        status = "PASS" if rc == 0 else f"FAIL({rc})"
+        print(f"{name.ljust(width)}  {status:6}  {dt:7.1f}")
+    failed = [n for n, rc, _ in rows if rc != 0]
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def run_full_suite(args) -> int:
     steps = 80 if args.fast else 250
     qat_steps = 60 if args.fast else 200
 
-    from benchmarks import (arch_power, fig3_equal_power, fig4_mse_ratio,
-                            kernel_bench, roofline, table1_bitflips,
+    from benchmarks import (arch_power, artifact_parity, fig3_equal_power,
+                            fig4_mse_ratio, fleet_sim, kernel_bench,
+                            roofline, serve_traversal, table1_bitflips,
                             table2_ptq, table3_qat, table4_addition_factor,
-                            table6_accumulator, table14_footprint)
+                            table6_accumulator, table14_footprint,
+                            train_bench)
 
+    # the full suite runs EVERYTHING the repo benchmarks — paper tables,
+    # kernels, and each end-to-end driver (main(argv) where the module's
+    # CLI owns its defaults), so the nightly CSV covers every subsystem
     jobs = [
         ("table1_bitflips", table1_bitflips.run, {}),
         ("fig3_equal_power", fig3_equal_power.run, {}),
@@ -32,6 +101,7 @@ def main() -> None:
         ("table6_accumulator", table6_accumulator.run, {}),
         ("arch_power", arch_power.run, {}),
         ("kernel_bench", kernel_bench.run, {}),
+        ("artifact_parity", artifact_parity.main, {"argv": []}),
         ("table2_ptq", table2_ptq.run, {"steps": steps}),
         ("table3_qat", table3_qat.run, {"steps": qat_steps}),
         ("table4_addition_factor", table4_addition_factor.run,
@@ -39,6 +109,11 @@ def main() -> None:
         ("table14_footprint", table14_footprint.run,
          {"steps": max(qat_steps, 100)}),
         ("roofline", roofline.run, {}),
+        ("serve_traversal", serve_traversal.main, {"argv": ["--reduced"]}),
+        ("serve_traversal_layerwise", serve_traversal.main,
+         {"argv": ["--reduced", "--allocation", "layerwise"]}),
+        ("train_bench", train_bench.run, {}),
+        ("fleet_sim", fleet_sim.main, {"argv": ["--reduced"]}),
     ]
     if args.only:
         keep = set(args.only.split(","))
@@ -49,12 +124,44 @@ def main() -> None:
     for name, fn, kw in jobs:
         try:
             fn(**kw)
+        except SystemExit as e:  # a main(argv) that failed its own gate
+            if e.code not in (0, None):
+                failed.append(name)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
-        raise SystemExit(1)
+        return 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps for the accuracy tables")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names (full suite)")
+    ap.add_argument("--ci-gates", action="store_true",
+                    help="run the baseline-gated --check benchmarks as "
+                         "subprocesses with one summary table")
+    ap.add_argument("--gates", default=None,
+                    help="comma-separated gate names for --ci-gates "
+                         f"(default: {','.join(DEFAULT_CI_GATES)}; "
+                         f"available: {','.join(GATES)})")
+    ap.add_argument("--fleet-scale", type=int, default=1,
+                    help="--scale forwarded to the fleet_sim gate")
+    args = ap.parse_args()
+
+    if args.ci_gates:
+        names = (args.gates.split(",") if args.gates
+                 else list(DEFAULT_CI_GATES))
+        unknown = [n for n in names if n not in GATES]
+        if unknown:
+            ap.error(f"unknown gate(s) {unknown}; available: "
+                     f"{sorted(GATES)}")
+        raise SystemExit(run_ci_gates(names, fleet_scale=args.fleet_scale))
+    raise SystemExit(run_full_suite(args))
 
 
 if __name__ == "__main__":

@@ -376,3 +376,40 @@ def allocate_layerwise(power_budget: float,
                          uniform_tree=uniform_tree,
                          total_macs=total_macs, total_power=total_power,
                          per_module=per_module)
+
+
+def replan_for_rate(cap_bitflips_per_s: float,
+                    tokens_per_s: float,
+                    profile: Sequence,
+                    b_range: Sequence[int] = tuple(range(2, 9)),
+                    bits_envelope: tuple[int, int] = (2, 8),
+                    ) -> LayerwisePlan:
+    """Telemetry-driven replan: the per-MAC power budget a MEASURED token
+    rate leaves under a fleet-wide bit-flips/sec cap, spent layerwise.
+
+    This is the closed-loop heart of the fleet power governor
+    (``repro.serve_engine.fleet``): aggregated ``EnergyLedger`` telemetry
+    gives the fleet's realized tokens/sec; dividing the cap by (rate x
+    total MACs/token) yields the affordable per-weight-MAC budget, which
+    ``allocate_layerwise`` then spends across modules exactly as at plan
+    time. The resulting plan's ``power_budget`` is what rung-ceiling
+    selection compares against ladder rung powers.
+
+    The budget is clamped to the constructible envelope
+    ``[budget_from_bits(lo), budget_from_bits(hi)]`` — a cap far above
+    what the traffic can spend replans at the top of the ladder instead
+    of chasing unbounded R, and a cap below the cheapest viable point
+    replans at the floor instead of raising from the knapsack.
+    Deterministic: a pure function of its (finite) float inputs.
+    """
+    if cap_bitflips_per_s <= 0:
+        raise ValueError(f"cap must be positive, got {cap_bitflips_per_s}")
+    total_macs = sum(m.macs for m in profile if m.macs > 0)
+    if total_macs <= 0:
+        raise ValueError("empty module cost profile")
+    rate = max(float(tokens_per_s), 1e-9)
+    per_mac = cap_bitflips_per_s / (rate * total_macs)
+    lo = budget_from_bits(bits_envelope[0])
+    hi = budget_from_bits(bits_envelope[1])
+    per_mac = min(max(per_mac, lo), hi)
+    return allocate_layerwise(per_mac, profile, b_range=b_range)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Iterable, Optional
 
 DEFAULT_ACC_BITS = 32  # the paper's default accumulator width
 
@@ -217,3 +217,34 @@ class EnergyLedger:
                 path: round(v / denom, 4) for path, v in
                 sorted(self.breakdown_per_token.items())}
         return out
+
+
+def aggregate_ledgers(ledgers: "Iterable[EnergyLedger]") -> dict:
+    """Fleet-level telemetry: fold per-stream ``EnergyLedger`` accounts from
+    MANY hosts into one report — total tokens, total realized bit flips,
+    and the merged per-module breakdown (module path -> total bit flips).
+
+    The fold is order-deterministic for the caller's iteration order, so a
+    fleet that sums hosts in id order and streams in uid order realizes the
+    SAME float total on every run — the property the fleet-sim CI gate
+    checks EXACTLY against its committed baseline
+    (``repro.serve_engine.fleet``, benchmarks/fleet_sim.py).
+    """
+    tokens = 0
+    total = 0.0
+    by_module: dict = {}
+    for led in ledgers:
+        tokens += led.tokens
+        total += led.total
+        if led.breakdown_per_token:
+            for path in sorted(led.breakdown_per_token):
+                by_module[path] = by_module.get(path, 0.0) + \
+                    led.breakdown_per_token[path] * led.tokens
+    out = {
+        "tokens": tokens,
+        "bitflips_total": total,
+        "gbitflips_total": giga(total),
+    }
+    if by_module:
+        out["per_module_bitflips"] = dict(sorted(by_module.items()))
+    return out

@@ -6,11 +6,59 @@ detection at the trainer level). ``Supervisor`` wraps a step loop with
 periodic checkpointing and restart-from-latest-checkpoint on crashes — the
 single-process stand-in for the pod-level supervisor that restarts failed
 workers against the same checkpoint stream.
+
+``HostFailure``/``FleetSupervisor`` are the serving-fleet analogues at HOST
+granularity: a fleet host dying mid-decode raises ``HostFailure``; the
+supervisor absorbs it by rebuilding that one host (in the fleet, from the
+shared mmap serving artifact — docs/fleet.md) while the rest of the fleet
+keeps serving. In-flight work on the dead host is resumed by prefix replay,
+which is bit-exact by the same argument as mid-stream rung switching
+(DESIGN.md §6), so a kill costs latency and restart energy but never
+changes a single served token (tests/test_fleet.py).
 """
 from __future__ import annotations
 
 import time
 from typing import Any, Callable, Optional
+
+
+class HostFailure(RuntimeError):
+    """One fleet host died (simulated kill or a real crash mid-step)."""
+
+    def __init__(self, host_id: int, reason: str = "killed"):
+        super().__init__(f"host {host_id}: {reason}")
+        self.host_id = int(host_id)
+        self.reason = reason
+
+
+class FleetSupervisor:
+    """Restart failed hosts against the shared serving artifact.
+
+    ``restart_fn(host_id)`` must return the replacement host; ``absorb``
+    enforces a per-host restart budget (a host that keeps dying is a real
+    outage, not a blip — re-raise rather than flap forever). The fleet
+    calls ``absorb`` from its tick loop, so supervision is synchronous with
+    simulated time and the restart count is deterministic for a fixed
+    kill schedule.
+    """
+
+    def __init__(self, restart_fn: Callable[[int], Any],
+                 max_restarts_per_host: int = 3):
+        self.restart_fn = restart_fn
+        self.max_restarts_per_host = int(max_restarts_per_host)
+        self.restarts: dict[int, int] = {}
+
+    @property
+    def total_restarts(self) -> int:
+        return sum(self.restarts.values())
+
+    def absorb(self, failure: HostFailure) -> Any:
+        """Handle one host failure: count it and rebuild the host."""
+        n = self.restarts.get(failure.host_id, 0) + 1
+        if n > self.max_restarts_per_host:
+            raise failure
+        self.restarts[failure.host_id] = n
+        return self.restart_fn(failure.host_id)
 
 
 class StepMonitor:

@@ -187,3 +187,31 @@ def to_named(specs: Any, mesh) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Fleet: rung shards (host-level sharding of the ladder's variant cache)
+# ---------------------------------------------------------------------------
+
+def rung_shard(ladder_bits: Sequence[int], n_hosts: int
+               ) -> dict[int, tuple[int, ...]]:
+    """Assign ladder rungs to decode hosts, round-robin.
+
+    The device-level specs above shard ONE variant's leaves across a mesh;
+    this is the HOST-level rule of the serving fleet
+    (``repro.serve_engine.fleet``): each decode host materializes (and
+    warms up) only its shard of the per-rung view cache, so fleet-wide
+    variant memory is flat in ladder depth x hosts rather than their
+    product. Deterministic and total: every rung lands on at least one
+    host and every host serves at least one rung — with more hosts than
+    rungs the extra hosts replicate the ladder cyclically (capacity), with
+    more rungs than hosts a host serves several rungs.
+    """
+    bits = sorted({int(b) for b in ladder_bits})
+    if not bits or n_hosts <= 0:
+        raise ValueError(f"need >=1 rung and >=1 host, got {bits!r} x "
+                         f"{n_hosts}")
+    shards: dict[int, set] = {h: set() for h in range(n_hosts)}
+    for i in range(max(n_hosts, len(bits))):
+        shards[i % n_hosts].add(bits[i % len(bits)])
+    return {h: tuple(sorted(s)) for h, s in shards.items()}

@@ -13,12 +13,20 @@ budget — one process, one compiled step, many power levels:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --power_ladder 2,4,6 --budgets 4,2,6,6 --batch 4 --gen 16
+
+Fleet under a global power cap (repro.serve_engine.fleet): N rung-sharded
+decode hosts + a prefill host serving ONE mmap artifact, a telemetry-driven
+governor holding aggregate Gbit-flips/sec under --global_budget:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --fleet_hosts 4 --global_budget 0.25 --ticks 12
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import tempfile
 import time
 
 import jax
@@ -32,6 +40,8 @@ from repro.data.pipeline import frontend_stub
 from repro.models import model as MD
 from repro.models import serving
 from repro.serve_engine import Request, ServeEngine
+from repro.serve_engine.fleet import (Fleet, FleetConfig, TrafficSpec,
+                                      make_trace)
 
 
 def plan_quant(args, total_macs: float | None = None) -> QuantConfig:
@@ -47,6 +57,57 @@ def plan_quant(args, total_macs: float | None = None) -> QuantConfig:
                            act_bits_tilde=plan.b_x_tilde)
     return QuantConfig(mode=args.quant, weight_bits=args.power_bits,
                        act_bits=args.power_bits)
+
+
+def serve_fleet(args) -> dict:
+    """The fleet path: N simulated hosts under one global Gbit-flips/s cap."""
+    ladder_bits = tuple(int(b) for b in
+                        (args.power_ladder or "2,4,6").split(","))
+    cfg = configs.get_config(args.arch, quant=QuantConfig(mode="none"))
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    fc = FleetConfig(
+        n_decode_hosts=args.fleet_hosts,
+        n_prefill_hosts=1,
+        ladder_bits=ladder_bits,
+        allocation=args.allocation,
+        cap_gbitflips_per_s=args.global_budget,
+        max_batch=args.batch,
+        max_len=args.prompt_len + args.gen + 2,
+        backend=args.backend or None,
+    )
+    spec = TrafficSpec(seed=args.seed + 7, n_ticks=args.ticks,
+                       prompt_lens=(args.prompt_len,),
+                       gen_tokens=(max(args.gen - 4, 2), args.gen),
+                       budget_mix=ladder_bits + (max(ladder_bits),))
+    art_dir = args.artifact_dir or tempfile.mkdtemp(prefix="fleet_serve_")
+    fleet = Fleet(cfg, fc, art_dir, params=params)
+    trace = make_trace(spec, cfg.vocab_size, fleet.ladder)
+
+    t0 = time.monotonic()
+    report = fleet.run(trace)
+    dt = time.monotonic() - t0
+    fleet.assert_no_recompile()
+
+    summary = {
+        "arch": cfg.name,
+        "mode": "fleet",
+        "hosts": report["hosts"],
+        "artifact_dir": art_dir,
+        "cap_gbitflips_per_s": args.global_budget,
+        "requests": report["requests"],
+        "served": report["served"],
+        "realized_gbitflips": report["realized_gbitflips"],
+        "realized_gbitflips_per_s": report["realized_gbitflips_per_s"],
+        "cap_violations": report["cap_violations"],
+        "rung_token_histogram": report["rung_token_histogram"],
+        "governor_replans": len(report["governor"]["replans"]),
+        "wall_s": round(dt, 3),
+    }
+    print("[serve] " + json.dumps(summary))
+    return summary
 
 
 def serve_ladder(args) -> dict:
@@ -179,9 +240,23 @@ def main(argv=None) -> dict:
                          "request stream; defaults to the ladder itself")
     ap.add_argument("--requests", type=int, default=0,
                     help="number of requests in ladder mode (default: --batch)")
+    ap.add_argument("--fleet_hosts", type=int, default=0,
+                    help="serve a simulated multi-host fleet with this many "
+                         "rung-sharded decode hosts (+1 prefill host) under "
+                         "--global_budget (repro.serve_engine.fleet)")
+    ap.add_argument("--global_budget", type=float, default=0.25,
+                    help="fleet mode: global power cap in Gbit-flips/sec, "
+                         "enforced per tick by the fleet governor")
+    ap.add_argument("--ticks", type=int, default=12,
+                    help="fleet mode: length of the synthetic traffic trace")
+    ap.add_argument("--artifact_dir", default="",
+                    help="fleet mode: write/reuse the mmap serving artifact "
+                         "here (default: a fresh temp dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.fleet_hosts:
+        return serve_fleet(args)
     if args.power_ladder:
         return serve_ladder(args)
     if args.allocation != "uniform":

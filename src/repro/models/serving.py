@@ -513,6 +513,45 @@ def build_weight_store(params: Any, cfg: ModelConfig,
     return WeightStore(store=store, views=view_trees)
 
 
+def device_put_weight_store(ws: WeightStore, mesh=None,
+                            par: Optional[ParallelConfig] = None
+                            ) -> WeightStore:
+    """Place a host-memory weight store (e.g. ``serve_engine.artifact.
+    load_artifact``'s mmap-backed numpy views) on device, PRESERVING the
+    store/view aliasing: every store leaf is uploaded exactly once, view
+    leaves that alias the store resolve to the SAME device buffer, and only
+    the small per-rung leaves are placed separately — so serving straight
+    from an artifact keeps weight HBM flat in ladder depth, exactly like a
+    store built in-process (``build_weight_store``). With a ``mesh`` the
+    training-param sharding rules apply, as there."""
+    if mesh is not None:
+        store_dev = jax.device_put(ws.store,
+                                   variant_shardings(ws.store, mesh, par))
+    else:
+        store_dev = jax.device_put(ws.store)
+    relink = {id(h): d for h, d in
+              zip(jax.tree_util.tree_leaves(ws.store),
+                  jax.tree_util.tree_leaves(store_dev))}
+
+    shardings = None
+    out_views = {}
+    for k, vt in ws.views.items():
+        if mesh is not None and shardings is None:  # views share avals
+            shardings = variant_shardings(vt, mesh, par)
+
+        def put(x, s=None):
+            hit = relink.get(id(x))
+            if hit is not None:
+                return hit
+            return jax.device_put(x) if s is None else jax.device_put(x, s)
+
+        if mesh is not None:
+            out_views[k] = jax.tree_util.tree_map(put, vt, shardings)
+        else:
+            out_views[k] = jax.tree_util.tree_map(put, vt)
+    return WeightStore(store=store_dev, views=out_views)
+
+
 def materialize_view(view: Any) -> Any:
     """Copy one rung view out into a standalone legacy-format variant:
     ``w_q`` becomes the masked codes the plane-skipping kernels realize

@@ -17,16 +17,27 @@ package turns that claim into a serving runtime:
               response
   artifact    the mmap-able on-disk form of the weight store
               (manifest.json + weights.bin; docs/artifact.md)
+  fleet       ``Fleet``: ServeEngine replicated across simulated hosts on
+              ``repro.dist`` — prefill/decode disaggregation, rung-sharded
+              variant caches served from ONE mmap artifact, and a
+              telemetry-driven power governor holding the whole fleet
+              under a global Gbit-flips/sec cap (docs/fleet.md)
 
-Design notes live in DESIGN.md §6 and §11; the end-to-end traversal
-benchmark is ``benchmarks/serve_traversal.py``.
+Design notes live in DESIGN.md §6, §11 and §12; the end-to-end traversal
+benchmark is ``benchmarks/serve_traversal.py`` and the fleet simulation is
+``benchmarks/fleet_sim.py``.
 """
 from repro.serve_engine.artifact import (ArtifactError, load_artifact,
                                          write_artifact)
-from repro.serve_engine.engine import ServeEngine
+from repro.serve_engine.engine import Lane, ServeEngine
+from repro.serve_engine.fleet import (Fleet, FleetConfig, FleetTrace,
+                                      PowerGovernor, TrafficSpec,
+                                      make_trace, verify_streams)
 from repro.serve_engine.ladder import OperatingPoint, build_ladder, select_rung
 from repro.serve_engine.scheduler import Request, Response, Scheduler
 
-__all__ = ["ServeEngine", "OperatingPoint", "build_ladder", "select_rung",
-           "Request", "Response", "Scheduler", "ArtifactError",
-           "load_artifact", "write_artifact"]
+__all__ = ["ServeEngine", "Lane", "OperatingPoint", "build_ladder",
+           "select_rung", "Request", "Response", "Scheduler",
+           "ArtifactError", "load_artifact", "write_artifact",
+           "Fleet", "FleetConfig", "FleetTrace", "PowerGovernor",
+           "TrafficSpec", "make_trace", "verify_streams"]

@@ -35,19 +35,40 @@ from repro.serve_engine.scheduler import Request, Response, Scheduler, Wave
 
 
 @dataclasses.dataclass
-class _Lane:
-    """One in-flight wave: its decode state and the tokens grown so far."""
+class Lane:
+    """One in-flight wave: its decode state and the tokens grown so far.
+
+    Public because the fleet (``serve_engine.fleet``) moves lanes BETWEEN
+    engines: a prefill host builds the lane, a decode host advances it, and
+    a restarted or switched-to host rebuilds it from ``prefix_rows()`` —
+    the decode state is re-derivable from the token prefix (teacher-forced
+    replay, DESIGN.md §6), so a lane's identity is its tokens, not its
+    arrays. ``done`` counts tokens generated before this lane's state was
+    (re)built; ``generated`` holds only the tokens grown since."""
     wave: Wave
     state: Any
     tok: Any                 # (max_batch, 1) int32 — last sampled token
     generated: list          # [(max_batch, 1), ...] greedy tokens
     steps_left: int
+    done: int = 0            # tokens generated before the latest (re)build
+
+    def generated_rows(self) -> np.ndarray:
+        """(n_requests, n_generated_since_build) int32 token matrix —
+        what the fleet appends to its per-request records when this lane
+        finishes, switches rung, or dies with its host."""
+        n = len(self.wave.requests)
+        if not self.generated:
+            return np.zeros((n, 0), np.int32)
+        return np.asarray(jnp.concatenate(self.generated, axis=1))[:n]
+
+
+_Lane = Lane                  # pre-fleet private name (back-compat)
 
 
 class ServeEngine:
     """Multi-operating-point PANN serving runtime (see module docstring)."""
 
-    def __init__(self, cfg: ModelConfig, params: Any,
+    def __init__(self, cfg: ModelConfig, params: Any = None,
                  ladder_bits: Sequence[int] = (2, 3, 4, 6),
                  max_batch: int = 4, max_len: int = 64, mesh=None,
                  par=None, mse_dim: Optional[float] = None,
@@ -56,7 +77,12 @@ class ServeEngine:
                  autotune: bool = False,
                  cache_bits: Any = None,
                  artifact_format: str = "views",
+                 weight_store: Optional[serving.WeightStore] = None,
                  frontend_kwargs_fn: Optional[Callable[[int], dict]] = None):
+        if (params is None) == (weight_store is None):
+            raise ValueError(
+                "pass exactly one of params (quantize here) or "
+                "weight_store (serve a prebuilt/loaded artifact)")
         if cfg.family in ("encdec", "vlm") and frontend_kwargs_fn is None:
             raise ValueError(
                 f"{cfg.family} decode needs a frontend; pass "
@@ -143,7 +169,38 @@ class ServeEngine:
                 f"artifact_format must be 'views' or 'legacy', "
                 f"got {artifact_format!r}")
         self.artifact_format = artifact_format
-        if artifact_format == "views":
+        if weight_store is not None:
+            # serve a prebuilt store — typically artifact.load_artifact's
+            # mmap-backed views (ROADMAP item 5: no re-quantization on the
+            # serving host; fleet hosts all map ONE weights.bin). The store
+            # must cover this engine's ladder; extra rungs are fine — a
+            # rung-sharded fleet host serves a SUBSET of the artifact's
+            # ladder (dist.sharding.rung_shard) from the same file.
+            if artifact_format != "views":
+                raise ValueError(
+                    "weight_store is the views materialization; it cannot "
+                    "be served as artifact_format='legacy'")
+            missing = [b for b in rung_specs if b not in weight_store.views]
+            if missing:
+                raise ValueError(
+                    f"weight_store has no view for rung(s) {missing}; "
+                    f"available: {sorted(weight_store.views)}")
+            if needs_planes:
+                leaf_names = {getattr(p[-1], "key", "") for p, _ in
+                              jax.tree_util.tree_leaves_with_path(
+                                  next(iter(weight_store.views.values())))}
+                if "w_planes_pos" not in leaf_names:
+                    raise ValueError(
+                        "packed backend needs plane leaves; this weight "
+                        "store was built without pack_planes")
+            ws = serving.device_put_weight_store(
+                serving.WeightStore(
+                    store=weight_store.store,
+                    views={b: weight_store.views[b] for b in rung_specs}),
+                mesh=mesh, par=par)
+            self.weight_store = ws.store
+            self.variants = ws.views
+        elif artifact_format == "views":
             ws = serving.build_weight_store(
                 params, cfg, rung_specs, mesh=mesh, par=par,
                 pack_planes=needs_planes,
@@ -281,20 +338,56 @@ class ServeEngine:
                               (self.max_batch - rows.shape[0],) + rows.shape[1:])
         return np.concatenate([rows, pad], axis=0)
 
-    def _prefill(self, wave: Wave) -> _Lane:
+    def prefill_wave(self, wave: Wave,
+                     prefix_rows: Optional[np.ndarray] = None) -> Lane:
+        """Teacher-force a wave's prompts and return its lane (the first
+        generated token included).
+
+        ``prefix_rows`` — (n_requests, prompt_len + done) int32 — replays a
+        lane that already generated ``done`` tokens elsewhere: on a host
+        restart (``dist.fault``) or a governor-forced rung switch the fleet
+        rebuilds the lane here from prompt + tokens-so-far, and because the
+        decode state is a pure function of the token prefix the rebuilt
+        lane's continuation is bit-identical to the uninterrupted one
+        (tests/test_fleet.py). The replayed wave's rung is THIS wave's rung
+        — switching is replaying into a different rung's view.
+        """
         reqs = wave.requests
         gen_max = max(r.max_new_tokens for r in reqs)
+        if prefix_rows is None:
+            rows, done = np.stack([r.prompt for r in reqs]), 0
+        else:
+            rows = np.asarray(prefix_rows, np.int32)
+            done = rows.shape[1] - reqs[0].prompt_len
+            if not 0 <= done < gen_max:
+                raise ValueError(
+                    f"replay prefix carries {done} generated tokens, "
+                    f"wave needs 0 <= done < {gen_max}")
         if reqs[0].prompt_len + gen_max > self.max_len:
             raise ValueError(
                 f"prompt_len {reqs[0].prompt_len} + gen {gen_max} exceeds "
                 f"engine max_len {self.max_len}")
-        prompts = jnp.asarray(
-            self._pad_rows(np.stack([r.prompt for r in reqs])), jnp.int32)
+        rows = jnp.asarray(self._pad_rows(rows), jnp.int32)
         state = self._init_state(wave.rung.bits)
-        logits, state = self._teacher_force(wave.rung.bits, state, prompts)
+        logits, state = self._teacher_force(wave.rung.bits, state, rows)
         tok = self._greedy(logits)
-        return _Lane(wave=wave, state=state, tok=tok, generated=[tok],
-                     steps_left=gen_max - 1)
+        return Lane(wave=wave, state=state, tok=tok, generated=[tok],
+                    steps_left=gen_max - done - 1, done=done)
+
+    _prefill = prefill_wave       # pre-fleet private name (back-compat)
+
+    def step_lane(self, lane: Lane) -> bool:
+        """Advance a lane one decode step; True when the lane is finished.
+        One step serves every live row of the wave — the fleet's unit of
+        power-cap admission (each call costs the wave one token per
+        request at its rung's bit-flip price)."""
+        if lane.steps_left > 0:
+            logits, lane.state = self._run_step(
+                lane.wave.rung.bits, lane.state, lane.tok)
+            lane.tok = self._greedy(logits)
+            lane.generated.append(lane.tok)
+            lane.steps_left -= 1
+        return lane.steps_left <= 0
 
     def _rung_tree(self, rung) -> pol.PolicyTree:
         """The rung's PolicyTree: its layerwise tree, or the uniform lift
@@ -316,7 +409,7 @@ class ServeEngine:
             ov[role] = pol.cache_module_quant(cb)
         return pol.policy_tree(tree.default, ov)
 
-    def _ledger_for(self, rung, ctx: int) -> pw.EnergyLedger:
+    def ledger_for(self, rung, ctx: int) -> pw.EnergyLedger:
         macs = self._macs_by_ctx.get(ctx)
         if macs is None:
             macs = self._macs_by_ctx.setdefault(
@@ -330,6 +423,16 @@ class ServeEngine:
             # cache-aware total stands on its own there.
             total = pw.pann_token_bitflips(macs, rung.r, rung.b_x_tilde)
         return pw.EnergyLedger(total, breakdown_per_token=breakdown)
+
+    _ledger_for = ledger_for      # pre-fleet private name (back-compat)
+
+    def token_flips(self, bits: int, ctx: int) -> float:
+        """Estimated bit flips of ONE token at rung ``bits`` with context
+        ``ctx`` — the deterministic per-step price the fleet governor
+        charges against its per-tick power grant before the step runs
+        (admission control is pre-paid; that is what makes zero cap
+        violations a structural property, not a measurement)."""
+        return self.ledger_for(self.rungs[bits], ctx).bitflips_per_token
 
     def _finalize(self, lane: _Lane) -> list[Response]:
         gen = np.asarray(jnp.concatenate(lane.generated, axis=1))
@@ -381,22 +484,16 @@ class ServeEngine:
                 select_rung(self.ladder, r.power_budget_bits, r.min_score))
         for r, rung in zip(requests, resolved):
             self.scheduler.submit(r, rung=rung)
-        lanes: list[_Lane] = []
+        lanes: list[Lane] = []
         responses: list[Response] = []
         while lanes or self.scheduler.pending():
             while len(lanes) < max_lanes:
                 wave = self.scheduler.next_wave()
                 if wave is None:
                     break
-                lanes.append(self._prefill(wave))
+                lanes.append(self.prefill_wave(wave))
             for lane in list(lanes):
-                if lane.steps_left > 0:
-                    logits, lane.state = self._run_step(
-                        lane.wave.rung.bits, lane.state, lane.tok)
-                    lane.tok = self._greedy(logits)
-                    lane.generated.append(lane.tok)
-                    lane.steps_left -= 1
-                if lane.steps_left <= 0:
+                if self.step_lane(lane):
                     responses.extend(self._finalize(lane))
                     lanes.remove(lane)
         return sorted(responses, key=lambda r: r.uid)

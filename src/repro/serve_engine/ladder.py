@@ -107,7 +107,8 @@ def build_ladder(bits: Sequence[int] = (2, 3, 4, 6), d: float = 4096.0,
 
 def select_rung(ladder: Sequence[OperatingPoint],
                 power_budget_bits: Optional[int] = None,
-                min_score: Optional[float] = None) -> OperatingPoint:
+                min_score: Optional[float] = None,
+                max_bits: Optional[int] = None) -> OperatingPoint:
     """Resolve a request's declared constraint to a rung.
 
     * power budget: the highest-fidelity rung whose power fits the budget
@@ -120,10 +121,26 @@ def select_rung(ladder: Sequence[OperatingPoint],
       floor needs more power than the budget allows, raise — silently
       violating a declared SLO is worse than refusing the request.
     * neither: the top rung.
+
+    ``max_bits`` is the fleet power governor's ceiling (docs/fleet.md): the
+    ladder is first clipped to rungs at or below it (keeping at least the
+    cheapest rung, mirroring the budget clamp), then the rules above apply
+    within the clipped ladder — so a global cap squeezes every selection
+    down the ladder without rewriting per-request constraints. A floor
+    that only a rung ABOVE the ceiling meets raises, like an unaffordable
+    budget+floor pair: the caller decides whether the cap or the SLO wins.
     """
     if not ladder:
         raise ValueError("empty ladder")
     ladder = sorted(ladder, key=lambda op: op.power)
+    if max_bits is not None:
+        clipped = [op for op in ladder if op.bits <= max_bits] or [ladder[0]]
+        if min_score is not None and all(op.score < min_score
+                                        for op in clipped):
+            raise ValueError(
+                f"no rung under the {max_bits}-bit governor ceiling meets "
+                f"score floor {min_score} (best: {clipped[-1].score})")
+        ladder = clipped
     if power_budget_bits is not None:
         fits = [op for op in ladder if op.bits <= power_budget_bits] \
             or [ladder[0]]

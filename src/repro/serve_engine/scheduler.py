@@ -73,16 +73,38 @@ class Scheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def next_wave(self) -> Optional[Wave]:
+    def drain(self) -> list[Request]:
+        """Remove and return every queued request, FIFO within each rung,
+        rungs in ladder (ascending-power) order. The fleet governor uses
+        this on a ceiling change: queued work was resolved under the OLD
+        ceiling, so it is drained and re-submitted through the new one —
+        re-selection is the governor's actuator, and it must reach work
+        that has not started yet, not only new arrivals."""
+        out: list[Request] = []
+        for q in self._queues.values():
+            out.extend(q)
+            q.clear()
+        return out
+
+    def next_wave(self, eligible_bits: Optional[set] = None
+                  ) -> Optional[Wave]:
         """Pop the next wave, round-robin over rungs with queued work.
 
         Within a rung's FIFO we take the head request and every request
         behind it with the same prompt length (up to max_batch), so a wave
         prefills as one rectangular batch without padding bookkeeping.
+
+        ``eligible_bits`` restricts which rungs may form a wave this call —
+        the fleet hands in the rungs that currently have a free decode slot
+        on some live host, so a busy (or dead) rung's queue waits without
+        blocking the others, and the round-robin cursor only advances past
+        rungs that actually produced work.
         """
         n = len(self.ladder)
         for off in range(n):
             bits = self.ladder[(self._rr + off) % n].bits
+            if eligible_bits is not None and bits not in eligible_bits:
+                continue
             q = self._queues[bits]
             if not q:
                 continue

@@ -1,0 +1,138 @@
+"""repro.serve_engine.fleet: multi-host serving under a global power cap.
+
+The two disruption paths ISSUE'd for this subsystem, both held to the
+bit-exactness bar:
+
+  * a decode-host kill mid-decode — the restarted host re-maps the SAME
+    mmap artifact and the replayed lanes resume bit-identically (and, at a
+    generous cap, the whole run serves the exact tokens of a kill-free
+    fleet);
+  * a mid-run step of the GLOBAL Gbit-flips/sec cap — the governor drops
+    its rung ceiling, in-flight lanes switch rungs mid-stream, and every
+    segment still replays bit-identically on one uninterrupted engine.
+
+Replays are verified wave-granular (``verify_streams``): activation quant
+scales are per-tensor over the batch, so bit-comparison requires the same
+batch composition — which is exactly what fleet restarts/switches preserve.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import model as MD
+from repro.serve_engine import ServeEngine
+from repro.serve_engine import artifact as afct
+from repro.serve_engine.fleet import (Fleet, FleetConfig, TrafficSpec,
+                                      make_trace, verify_streams)
+
+LADDER = (2, 4, 6)
+MAX_LEN = 20
+
+
+def _fc(**kw):
+    base = dict(n_decode_hosts=2, n_prefill_hosts=1, ladder_bits=LADDER,
+                cap_gbitflips_per_s=50.0, control_interval=3,
+                max_batch=2, max_len=MAX_LEN, drain_tick_factor=16)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    cfg = configs.reduced(configs.get_config("llama3-8b"))
+    cfg = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    art = str(tmp_path_factory.mktemp("fleet_artifact"))
+    # the first fleet quantizes once and writes the mmap artifact; every
+    # later Fleet/engine in this module maps that same file (params=None)
+    Fleet(cfg, _fc(), art, params=params)
+    return cfg, art
+
+
+@pytest.fixture(scope="module")
+def ref_engine(setup):
+    cfg, art = setup
+    eng = ServeEngine(cfg, weight_store=afct.load_artifact(art),
+                      ladder_bits=LADDER, max_batch=2, max_len=MAX_LEN)
+    eng.warmup()
+    return eng
+
+
+def _spec(**kw):
+    base = dict(seed=3, n_ticks=6, burst_prob=0.7, mean_burst=2.0,
+                prompt_lens=(6,), gen_tokens=(6, 10),
+                budget_mix=(2, 4, 6, 6), slo_prob=0.0)
+    base.update(kw)
+    return TrafficSpec(**base)
+
+
+def _tokens_by_uid(report):
+    return {s["uid"]: [t for seg in s["segments"]
+                       for t in seg["tokens"]][:s["max_new_tokens"]]
+            for s in report["streams"]}
+
+
+def test_host_kill_mid_decode_resumes_bit_identically(setup, ref_engine):
+    cfg, art = setup
+    spec = _spec(host_kills=((2, 1),))
+    killed = Fleet(cfg, _fc(), art)
+    report = killed.run(make_trace(spec, cfg.vocab_size, killed.ladder))
+    killed.assert_no_recompile()       # includes the restarted host
+
+    assert report["host_restarts"] >= 1
+    # the kill landed mid-decode: some stream was detached and replayed
+    assert any(s["restarts"] >= 1 for s in report["streams"])
+    # the reborn host re-maps the same artifact: every wave (disrupted or
+    # not) equals one uninterrupted engine, token for token
+    assert verify_streams(report, ref_engine) == []
+
+    # and the end-to-end responses are EXACTLY a kill-free fleet's: at this
+    # generous cap the kill may cost replay flips but never changes tokens
+    calm = Fleet(cfg, _fc(), art)
+    calm_report = calm.run(
+        make_trace(_spec(), cfg.vocab_size, calm.ladder))
+    assert calm_report["host_restarts"] == 0
+    assert _tokens_by_uid(report) == _tokens_by_uid(calm_report)
+
+
+def test_mid_run_global_budget_step_bit_exact(setup, ref_engine):
+    cfg, art = setup
+    spec = _spec(seed=5, n_ticks=12, budget_steps=((5, 0.03),))
+    fleet = Fleet(cfg, _fc(cap_gbitflips_per_s=0.25), art)
+    report = fleet.run(make_trace(spec, cfg.vocab_size, fleet.ladder))
+    fleet.assert_no_recompile()        # ONE compiled step across replans
+
+    # the cap step dropped the governor's rung ceiling...
+    assert any(pt["ceiling_bits"] < max(LADDER)
+               for pt in report["per_tick"])
+    # ...and forced at least one in-flight lane down the ladder mid-stream
+    assert any(s["switches"] >= 1 for s in report["streams"])
+    # the per-tick grant is structural: the step never overspends a tick
+    assert report["cap_violations"] == 0
+    # bit-exact mid-stream switching: every segment (pre- and post-switch)
+    # replays identically on one engine following the same rung schedule
+    assert verify_streams(report, ref_engine) == []
+
+
+def test_fleet_report_accounting(setup, ref_engine):
+    """Realized flips come from ledgers, not the plan: decode + prefill
+    ledger aggregates must add up to the reported fleet total."""
+    cfg, art = setup
+    fleet = Fleet(cfg, _fc(), art)
+    report = fleet.run(make_trace(_spec(seed=9, n_ticks=4),
+                                  cfg.vocab_size, fleet.ladder))
+    assert report["served"] == report["requests"]
+    total = report["decode_gbitflips"] + report["prefill_gbitflips"]
+    assert report["realized_gbitflips"] == pytest.approx(total)
+    assert report["realized_gbitflips"] > 0
+    # ledgers charge each request exactly its quota; the histogram is
+    # lane-aligned (a short row rides its wave to the wave's gen_max), so
+    # it can only overcount, never undercount
+    assert report["decode_tokens"] == sum(s["max_new_tokens"]
+                                          for s in report["streams"])
+    hist = report["rung_token_histogram"]
+    assert sum(hist.values()) >= report["decode_tokens"]
+    assert verify_streams(report, ref_engine) == []
