@@ -1,12 +1,14 @@
-"""Legacy exact-R vs snapped-R rung parity — the accuracy price of the
-zero-copy weight store, measured in theory score at EQUAL POWER.
+"""Snapped-budget drift check — the accuracy price of the zero-copy
+weight store, measured in theory score at EQUAL POWER.
 
-The views materialization (DESIGN.md §11, ``models.serving.
+The one-weight-store materialization (DESIGN.md §11, ``models.serving.
 build_weight_store``) quantizes each module once at its maximal ladder
 budget and realizes every narrower rung by dropping low bit-planes, so a
 rung runs at the SNAPPED budget ``r_max / 2^shift`` (``core.pann.
-view_shift``) rather than the exactly-planned R the legacy per-rung
-quantizer materializes. This benchmark prices that trade per rung:
+view_shift``) rather than the exactly-planned R. This benchmark bounds
+that drift per rung, in closed form (the retired per-rung "legacy"
+quantizer materialized exact budgets; these invariants are why serving
+does not need it):
 
   * ``power_ratio`` — realized snapped power / planned budget. Bounded by
     construction: the shift is the power of two NEAREST r_max/r, so
@@ -95,7 +97,8 @@ def check(rows: list[dict]) -> list[str]:
             failures.append(
                 f"rung {r['rung_bits']}b: equal-power theory-score gap "
                 f"{r['score_gap_rel']:.1%} > {MAX_SCORE_GAP_REL:.0%} — the "
-                f"snap costs real accuracy; consider a legacy rung here")
+                f"snap costs real accuracy; widen the ladder so this rung "
+                f"sits nearer a power-of-two of the top budget")
     top = max(rows, key=lambda r: r["rung_bits"])
     if top["plane_shift"] != 0 or top["power_ratio"] != 1.0:
         failures.append(

@@ -41,6 +41,7 @@ GATES: dict[str, list[str]] = {
     "table14_footprint": ["benchmarks/table14_footprint.py", "--reduced",
                           "--check"],
     "artifact_parity": ["benchmarks/artifact_parity.py", "--check"],
+    "encoder_bench": ["benchmarks/encoder_bench.py", "--check"],
     "fleet_sim": ["benchmarks/fleet_sim.py", "--reduced", "--check"],
     "train_bench": ["benchmarks/train_bench.py", "--check"],
 }
@@ -50,7 +51,7 @@ GATES: dict[str, list[str]] = {
 # is selectable but not default.
 DEFAULT_CI_GATES = ("kernel_bench", "roofline", "serve_traversal",
                     "serve_traversal_layerwise", "table14_footprint",
-                    "artifact_parity", "fleet_sim")
+                    "artifact_parity", "encoder_bench", "fleet_sim")
 
 
 def run_ci_gates(names, fleet_scale: int = 1) -> int:
@@ -84,12 +85,12 @@ def run_full_suite(args) -> int:
     steps = 80 if args.fast else 250
     qat_steps = 60 if args.fast else 200
 
-    from benchmarks import (arch_power, artifact_parity, fig3_equal_power,
-                            fig4_mse_ratio, fleet_sim, kernel_bench,
-                            roofline, serve_traversal, table1_bitflips,
-                            table2_ptq, table3_qat, table4_addition_factor,
-                            table6_accumulator, table14_footprint,
-                            train_bench)
+    from benchmarks import (arch_power, artifact_parity, encoder_bench,
+                            fig3_equal_power, fig4_mse_ratio, fleet_sim,
+                            kernel_bench, roofline, serve_traversal,
+                            table1_bitflips, table2_ptq, table3_qat,
+                            table4_addition_factor, table6_accumulator,
+                            table14_footprint, train_bench)
 
     # the full suite runs EVERYTHING the repo benchmarks — paper tables,
     # kernels, and each end-to-end driver (main(argv) where the module's
@@ -112,6 +113,7 @@ def run_full_suite(args) -> int:
         ("serve_traversal", serve_traversal.main, {"argv": ["--reduced"]}),
         ("serve_traversal_layerwise", serve_traversal.main,
          {"argv": ["--reduced", "--allocation", "layerwise"]}),
+        ("encoder_bench", encoder_bench.main, {"argv": []}),
         ("train_bench", train_bench.run, {}),
         ("fleet_sim", fleet_sim.main, {"argv": ["--reduced"]}),
     ]

@@ -9,7 +9,7 @@ from repro.configs import (dbrx_132b, gemma2_9b, llama3_8b,
                            llama_3_2_vision_90b, mixtral_8x7b, qwen1_5_4b,
                            rwkv6_1_6b, seamless_m4t_medium, stablelm_12b,
                            zamba2_1_2b)
-from repro.configs.base import (SHAPES, SHAPES_BY_NAME, ModelConfig,
+from repro.configs.base import (SHAPES, SHAPES_BY_NAME, ConvSpec, ModelConfig,
                                 MoEConfig, ParallelConfig, QuantConfig,
                                 ShapeConfig, TrainConfig)
 
@@ -51,6 +51,17 @@ def reduced(cfg: ModelConfig, *, layers: Optional[int] = None) -> ModelConfig:
     if layers is None:
         layers = pattern_len * 2 + (2 if cfg.family == "hybrid" else 0)
     kv = max(1, (4 * cfg.num_kv_heads) // cfg.num_heads)
+    # same-shape-family conv stems at smoke scale (stem_tokens matches the
+    # reduced token counts below: vlm 4x4=16, encdec 96 -> 48 -> 24)
+    stem: tuple = ()
+    hw: tuple = ()
+    if cfg.conv_stem and cfg.family == "vlm":
+        stem = (ConvSpec(kh=4, kw=4, sh=4, sw=4, c_in=3, c_out=64),)
+        hw = (16, 16)
+    elif cfg.conv_stem:
+        stem = (ConvSpec(kh=3, kw=1, sh=2, sw=1, c_in=80, c_out=64, ph=1),
+                ConvSpec(kh=3, kw=1, sh=2, sw=1, c_in=64, c_out=64, ph=1))
+        hw = (96, 1)
     return dataclasses.replace(
         cfg,
         name=cfg.name + "-smoke",
@@ -69,11 +80,14 @@ def reduced(cfg: ModelConfig, *, layers: Optional[int] = None) -> ModelConfig:
         ssm_state=16 if cfg.ssm_state else 0,
         ssm_head_dim=16,
         moe=MoEConfig(num_experts=4, top_k=2) if cfg.moe else None,
+        conv_stem=stem,
+        frontend_hw=hw,
     )
 
 
 __all__ = [
-    "ARCH_NAMES", "SHAPES", "SHAPES_BY_NAME", "ModelConfig", "MoEConfig",
+    "ARCH_NAMES", "SHAPES", "SHAPES_BY_NAME", "ConvSpec", "ModelConfig",
+    "MoEConfig",
     "ParallelConfig", "QuantConfig", "ShapeConfig", "TrainConfig",
     "get_config", "reduced",
 ]

@@ -20,6 +20,34 @@ class QuantConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One conv-stem layer's static geometry (NHWC, zero 'same-ish' pad).
+
+    Geometry is CONFIG, never artifact data: the serving artifact stores a
+    conv kernel flat as a (kh*kw*c_in, c_out) matrix (kernels/pann_conv
+    layout contract), so the one weight store / mmap schema is untouched
+    and rung views, plane packing, and the allocator all see a linear with
+    fan-in kh*kw*c_in.
+    """
+    kh: int                       # kernel height
+    kw: int                       # kernel width
+    sh: int                       # stride height
+    sw: int                       # stride width
+    c_in: int
+    c_out: int
+    ph: int = 0                   # zero padding (each side), height
+    pw: int = 0                   # zero padding (each side), width
+
+    @property
+    def fan_in(self) -> int:
+        return self.kh * self.kw * self.c_in
+
+    def out_hw(self, h: int, w: int) -> Tuple[int, int]:
+        return ((h + 2 * self.ph - self.kh) // self.sh + 1,
+                (w + 2 * self.pw - self.kw) // self.sw + 1)
+
+
+@dataclasses.dataclass(frozen=True)
 class MoEConfig:
     num_experts: int
     top_k: int
@@ -64,6 +92,14 @@ class ModelConfig:
     # --- VLM ---
     cross_attn_period: int = 0    # llama-3.2-vision: cross-attn every Nth layer
     num_image_tokens: int = 0
+    # --- modality frontend (conv stem) ---
+    # When non-empty, the encoder path owns a REAL conv stem: raw (B, H, W,
+    # C) pixels / (B, frames, 1, mels) features run through these layers
+    # (models.layers.apply_conv -> kernels.dispatch.serving_conv) and the
+    # result is flattened to the encoder/image token sequence. Empty = the
+    # pre-conv behavior (data.pipeline.frontend_stub embeddings).
+    conv_stem: Tuple[ConvSpec, ...] = ()
+    frontend_hw: Tuple[int, int] = ()   # raw input spatial dims (H, W)
     # --- serving ---
     kv_cache_dtype: str = ""      # "" = compute dtype; "float8_e4m3fn" halves
     #                               KV-cache bytes for decode (§Perf iter. 7)
@@ -101,6 +137,20 @@ class ModelConfig:
     def padded_vocab(self) -> int:
         """Vocab padded to a multiple of 256 so TP shards evenly."""
         return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def stem_out_hw(self) -> Tuple[int, int]:
+        """Spatial dims after the conv stem (requires conv_stem set)."""
+        h, w = self.frontend_hw
+        for spec in self.conv_stem:
+            h, w = spec.out_hw(h, w)
+        return h, w
+
+    @property
+    def stem_tokens(self) -> int:
+        """Token-sequence length the conv stem feeds the encoder."""
+        h, w = self.stem_out_hw
+        return h * w
 
     @property
     def is_attention_free(self) -> bool:

@@ -61,6 +61,10 @@ def _layer_params(cfg: ModelConfig, kind: str) -> int:
     raise ValueError(kind)
 
 
+def _conv_stem_params(cfg: ModelConfig) -> int:
+    return sum(s.fan_in * s.c_out + s.c_out for s in cfg.conv_stem)
+
+
 def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
     """Total (or MoE-active) parameter count."""
     pattern, n_groups, n_tail = group_layout(cfg)
@@ -80,6 +84,7 @@ def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
         total += _attn_params(cfg) + _mlp_params(cfg)   # shared block
     if cfg.family == "encdec":
         total += cfg.encoder_layers * (_attn_params(cfg) + _mlp_params(cfg))
+    total += _conv_stem_params(cfg)
     return total
 
 
@@ -106,10 +111,19 @@ def macs_per_token(cfg: ModelConfig, context_len: int = 4096) -> MacBreakdown:
 
     act_macs covers QK^T and attention·V (context_len keys) — products with
     no static weight operand, outside PANN's scope (DESIGN.md §4).
+
+    A conv stem is NOT one MAC per param per token (spatial weight reuse:
+    each kernel fires Ho·Wo times per item), so its param count is swapped
+    out for the exact per-layer kh·kw·Cin·Cout·Ho·Wo account, amortized
+    per produced frontend token — the same rows ``module_cost_profile``
+    itemizes, keeping the two accounts equal to float precision.
     """
     weight = float(param_count(cfg, active_only=True))
     # embedding lookups are gathers, not MACs
     weight -= cfg.padded_vocab * cfg.d_model
+    if cfg.conv_stem:
+        weight -= float(_conv_stem_params(cfg))
+        weight += sum(m.macs for m in conv_stem_token_costs(cfg))
     pattern, n_groups, n_tail = group_layout(cfg)
     seq = [s.kind for s in pattern] * n_groups \
         + [pattern[i].kind for i in range(n_tail)]
@@ -228,9 +242,110 @@ def module_cost_profile(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
         add_mlp(float(cfg.encoder_layers))
     if not cfg.tie_embeddings:
         add("lm_head", d, cfg.padded_vocab)
+    # conv-stem roles, amortized per produced frontend token (see
+    # macs_per_token) — present so allocate_layerwise trades conv bits
+    # against attention/cache bits under ONE budget, and so the engine's
+    # EnergyLedger breakdown itemizes the stem like any other role
+    for m in conv_stem_token_costs(cfg):
+        acc[m.path] = [m.macs, m.fan_in, m.instances]
     return tuple(ModuleCost(path=p, macs=row[0], fan_in=row[1],
                             instances=row[2])
                  for p, row in sorted(acc.items()))
+
+
+# ---------------------------------------------------------------------------
+# Conv stems and the encoder (per-item) account
+# ---------------------------------------------------------------------------
+
+def conv_stem_item_costs(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
+    """EXACT per-ITEM (image / utterance) conv MACs, one role per stem
+    layer: kh·kw·Cin · Cout · Ho·Wo — the Moons-et-al.-style per-layer conv
+    energy account in the repo's MAC currency. Geometry walks forward from
+    ``cfg.frontend_hw`` through each ``ConvSpec``. fan_in = kh·kw·Cin is
+    both the Eq.-19 sensitivity d and the Eq.-20 accumulator bound, so the
+    layerwise allocator prices conv roles with zero new code."""
+    if not cfg.conv_stem:
+        return ()
+    h, w = cfg.frontend_hw
+    rows = []
+    for i, spec in enumerate(cfg.conv_stem):
+        ho, wo = spec.out_hw(h, w)
+        rows.append(ModuleCost(
+            path=f"conv.s{i}",
+            macs=float(spec.fan_in) * float(spec.c_out) * float(ho * wo),
+            fan_in=spec.fan_in))
+        h, w = ho, wo
+    return tuple(rows)
+
+
+def conv_stem_token_costs(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
+    """Conv-stem roles amortized per PRODUCED frontend token (item MACs /
+    stem token count) — the form that composes with the per-token rows of
+    ``module_cost_profile`` / ``macs_per_token``."""
+    rows = conv_stem_item_costs(cfg)
+    if not rows:
+        return ()
+    n_tok = float(max(cfg.stem_tokens, 1))
+    return tuple(dataclasses.replace(m, macs=m.macs / n_tok) for m in rows)
+
+
+def encoder_tokens(cfg: ModelConfig) -> int:
+    """Length of the token sequence one encoded item produces."""
+    if cfg.conv_stem:
+        return cfg.stem_tokens
+    if cfg.family == "vlm":
+        return cfg.num_image_tokens
+    return cfg.encoder_seq_len
+
+
+def encoder_cost_profile(cfg: ModelConfig) -> tuple[ModuleCost, ...]:
+    """Per-ITEM weight-MAC profile of the ENCODE path — what one image /
+    utterance costs, the unit the encoder serving ladder budgets in
+    (per-item power budgets instead of per-token).
+
+    Conv rows are exact (``conv_stem_item_costs``); for an encdec family
+    the bidirectional encoder stack runs every layer over every produced
+    token, so its attn/mlp roles carry encoder_layers · n_tokens instances
+    of the per-token MACs. A vlm's encode path is the stem alone (its
+    transformer is the cross-attending DECODER, priced per decoded token
+    by ``module_cost_profile``)."""
+    acc: dict[str, list] = {}
+    for m in conv_stem_item_costs(cfg):
+        acc[m.path] = [m.macs, m.fan_in, m.instances]
+    if cfg.family == "encdec" and cfg.encoder_layers:
+        d = cfg.d_model
+        hd = cfg.resolved_head_dim
+        count = float(cfg.encoder_layers) * float(encoder_tokens(cfg))
+
+        def add(path: str, d_in: int, d_out: int) -> None:
+            row = acc.setdefault(path, [0.0, int(d_in), 0])
+            row[0] += float(d_in) * float(d_out) * count
+            row[2] += cfg.encoder_layers
+
+        add("attn.wq", d, cfg.num_heads * hd)
+        add("attn.wk", d, cfg.num_kv_heads * hd)
+        add("attn.wv", d, cfg.num_kv_heads * hd)
+        add("attn.wo", cfg.num_heads * hd, d)
+        if cfg.activation in ("swiglu", "geglu"):
+            add("mlp.w_gate", d, cfg.d_ff)
+        add("mlp.w_up", d, cfg.d_ff)
+        add("mlp.w_down", cfg.d_ff, d)
+    return tuple(ModuleCost(path=p, macs=row[0], fan_in=row[1],
+                            instances=row[2])
+                 for p, row in sorted(acc.items()))
+
+
+def encoder_macs_per_item(cfg: ModelConfig) -> MacBreakdown:
+    """Weight vs act MACs of encoding ONE item. act_macs is the encoder's
+    bidirectional self-attention: 2·H·hd·T per query token over T tokens
+    per layer (T², not T·ctx — whole-sequence waves, no KV cache)."""
+    weight = sum(m.macs for m in encoder_cost_profile(cfg))
+    act = 0.0
+    if cfg.family == "encdec" and cfg.encoder_layers:
+        t = float(encoder_tokens(cfg))
+        act = 2.0 * cfg.num_heads * cfg.resolved_head_dim * t * t \
+            * cfg.encoder_layers
+    return MacBreakdown(weight_macs=weight, act_macs=act)
 
 
 def cache_cost_modules(cfg: ModelConfig, context_len: int = 4096

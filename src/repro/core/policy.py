@@ -32,6 +32,12 @@ and ``models/serving.py``):
   rwkv.tm.wr rwkv.tm.wk rwkv.tm.wv rwkv.tm.wg rwkv.tm.decay_a
   rwkv.tm.decay_b rwkv.tm.wo rwkv.cm.wk rwkv.cm.wv
   lm_head
+  conv.s0 conv.s1 ...                        (modality-frontend conv stem
+                                              layers, one role per depth —
+                                              stems are shallow and their
+                                              fan-ins differ per layer, so
+                                              unlike the scanned stack each
+                                              depth IS a role)
   attn.k_cache attn.v_cache                  (decode-time KV cache codes;
                                               mode="ruq_unsigned", b_x = the
                                               cache bits — see CACHE_PATHS)
@@ -183,11 +189,15 @@ def serving_path(trail: Sequence[str]) -> str:
     """Map a param-pytree key trail to the canonical policy path.
 
     e.g. ("decoder", "groups", "layers", "attn", "wq") -> "attn.wq";
-    ("tm", "wr") -> "rwkv.tm.wr"; ("lm_head",) -> "lm_head".
+    ("tm", "wr") -> "rwkv.tm.wr"; ("lm_head",) -> "lm_head";
+    ("conv_stem", "s0") -> "conv.s0".
     ``xattn`` and the zamba2 ``shared_attn`` block map onto ``attn`` so one
     policy entry covers every attention instance.
     """
     leaf = trail[-1]
+    if "conv_stem" in trail:
+        # stem layers are per-depth roles: shallow, heterogeneous fan-ins
+        return f"conv.{leaf}"
     parent = next((t for t in reversed(trail[:-1]) if t in _STRUCTURAL),
                   None)
     if parent in _RWKV_SUBBLOCKS:

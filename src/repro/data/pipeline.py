@@ -85,3 +85,20 @@ def frontend_stub(cfg: ModelConfig, batch: int, step: int, seed: int = 0
         return None
     rng = np.random.default_rng(np.random.SeedSequence([seed, step, 77]))
     return rng.standard_normal((batch, n, cfg.d_model)).astype(np.float32)
+
+
+def frontend_raw_stub(cfg: ModelConfig, batch: int, step: int, seed: int = 0
+                      ) -> Optional[np.ndarray]:
+    """Deterministic RAW frontend input for configs with a real conv stem:
+    (B, H, W, 3) pixels in [0, 1) for vision, (B, frames, 1, mels) standard-
+    normal fbank features for speech — fed to ``models.model.encode`` (or
+    ``forward``, which routes 4-D input through the stem). None when the
+    config has no stem (use ``frontend_stub`` embeddings instead)."""
+    if not cfg.conv_stem:
+        return None
+    h, w = cfg.frontend_hw
+    c = cfg.conv_stem[0].c_in
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 78]))
+    if cfg.family == "vlm":
+        return rng.random((batch, h, w, c)).astype(np.float32)
+    return rng.standard_normal((batch, h, w, c)).astype(np.float32)

@@ -66,6 +66,7 @@ from repro.core.pann import bitplane_decompose, masked_codes
 from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels import pann_attention as _pa
+from repro.kernels import pann_conv as _pc
 from repro.kernels import pann_matmul as _pm
 from repro.kernels import pann_matmul_packed as _pk
 from repro.kernels import ref as _ref
@@ -251,6 +252,83 @@ def _act_scalars(xf: Array, p: dict) -> tuple[Array, Array, Array]:
     return s, z, n_lvl
 
 
+def _shift_leaf(p: dict):
+    """The module's ``plane_shift`` view leaf as a traced f32 scalar.
+
+    A rung VIEW over a max-R plane store (models/serving build_rung_views)
+    marks its dead low planes with this DATA leaf; the kernels skip them at
+    runtime, so every rung shares one compilation. Artifacts without the
+    leaf get None -> shift 0 -> the pre-view dataflow.
+    """
+    shift = p.get("plane_shift")
+    if shift is None:
+        return None
+    return jnp.asarray(shift, jnp.float32).reshape(())
+
+
+def _gamma_zcol(p: dict, s, z, shift) -> tuple[Array, Array]:
+    """(gamma, zcol): the per-output-channel dequant scale and the EXACT
+    int32 zero-point/bias row — s(q - z) @ (gamma*w) = s*gamma*(q @ w_q
+    - z*colsum(w_q)). Subtracting inside the integer accumulator (kernels
+    take zcol; the jnp oracles mirror it) keeps the epilogue free of fp
+    adds, which XLA would contract into backend-dependent fmas — the
+    backends' bit-exactness depends on this.
+
+    The artifact carries colsum precomputed (models/serving.py) so the
+    packed backend never has to stream the full int8 code tensor just for
+    this reduction; recomputing is the fallback for hand-built leaves.
+    """
+    w_q = p["w_q"]
+    gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
+    colsum = p.get("w_colsum")
+    if colsum is None:
+        wc = (masked_codes(w_q, shift) if shift is not None
+              else w_q.astype(jnp.int32))
+        colsum = jnp.sum(wc, axis=-2)
+    zcol = z.astype(jnp.int32) * colsum
+    if "b" in p:
+        # bias joins the accumulator too, quantized onto the output grid
+        # s*gamma — the standard integer-inference bias treatment
+        # (gemmlowp/TFLite) and the only formulation whose rounding XLA
+        # cannot re-associate differently per backend (an fp "+ b" after
+        # the dequant multiplies gets fma-contracted next to a jnp dot but
+        # not next to a pallas call). Clipped so zcol - b_q stays well
+        # inside int32 whatever the scales are.
+        b_q = jnp.clip(jnp.round(p["b"].astype(jnp.float32) / (s * gamma)),
+                       -2.0 ** 30, 2.0 ** 30).astype(jnp.int32)
+        zcol = zcol - b_q
+    return gamma, zcol
+
+
+def _dispatch_rows(xf: Array, p: dict, s, z, n_lvl, gamma: Array,
+                   zcol: Array, shift, name: str, interpret: bool) -> Array:
+    """The backend branch on SEALED scalars: fp32 patch/token rows in,
+    (M, N) fp32 out — shared verbatim by ``serving_linear`` and
+    ``serving_conv``, which is what makes the conv projection inherit the
+    matmuls' cross-backend bit-exactness rather than re-prove it."""
+    w_q = p["w_q"]
+    if name == "fused":
+        n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
+                    else INT8_PLANES)
+        return _matmul_fused(xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
+                             interpret, shift=shift)
+    if name == "packed":
+        return _matmul_packed(xf, p["w_planes_pos"], p["w_planes_neg"],
+                              s, z, n_lvl, gamma, zcol, interpret,
+                              shift=shift)
+    # the jnp oracle materializes the codes (quant.affine_encode — the
+    # formula the kernels inline) and seals them so XLA cannot re-fuse
+    # the encode into the dot differently than the kernels would
+    q8 = jax.lax.optimization_barrier(
+        quant.affine_encode(xf, s, z, n_lvl).astype(jnp.int8))
+    # view shift: mask the dead low planes out of the codes — the jnp
+    # mirror of the kernels' plane skip (masked * gamma_R is exactly
+    # the truncated-code weight at the rung step gamma_R * 2^shift)
+    w_ref_q = (masked_codes(w_q, shift).astype(jnp.int8)
+               if shift is not None else w_q)
+    return _matmul_ref(q8, w_ref_q, s, gamma, zcol)
+
+
 def serving_linear(x: Array, p: dict, backend: str) -> Array:
     """The serving projection: y = affine-quant(x) @ deq(w_q) [+ b] through
     the selected backend. ``p`` is one module's serving artifact (2-D w_q —
@@ -275,13 +353,7 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     # the bit-exactness contract must survive jit, not just eager mode
     xf = jax.lax.optimization_barrier(x.reshape(-1, k).astype(jnp.float32))
     s, z, n_lvl = _act_scalars(xf, p)
-    # plane_shift: a rung VIEW over a max-R plane store (models/serving
-    # build_rung_views) marks its dead low planes with this DATA leaf; the
-    # kernels skip them at runtime, so every rung shares one compilation.
-    # Legacy artifacts have no leaf -> shift 0 -> the pre-view dataflow.
-    shift = p.get("plane_shift")
-    if shift is not None:
-        shift = jnp.asarray(shift, jnp.float32).reshape(())
+    shift = _shift_leaf(p)
     # seal the quantizer scalars: left open, XLA folds their derivation
     # into the backend-specific consumer cluster (e.g. strength-reducing
     # the x/s divide differently next to a dot than next to a pallas call)
@@ -289,54 +361,73 @@ def serving_linear(x: Array, p: dict, backend: str) -> Array:
     # consume these SAME sealed scalars — the in-kernel encode and the ref
     # encode below run the identical affine map on identical inputs.
     s, z, n_lvl = jax.lax.optimization_barrier((s, z, n_lvl))
-    gamma = p["w_scale"].astype(jnp.float32).reshape(-1)
-    # the zero-point correction as an EXACT int32 row: s(q - z) @ (gamma*w)
-    # = s*gamma*(q @ w_q - z*colsum(w_q)). Subtracting inside the integer
-    # accumulator (kernels take zcol; the jnp oracle mirrors it) keeps the
-    # epilogue free of fp adds, which XLA would contract into backend-
-    # dependent fmas — the backends' bit-exactness depends on this.
-    # the artifact carries colsum precomputed (models/serving.py) so the
-    # packed backend never has to stream the full int8 code tensor just for
-    # this reduction; recomputing is the fallback for hand-built leaves
-    colsum = p.get("w_colsum")
-    if colsum is None:
-        wc = (masked_codes(w_q, shift) if shift is not None
-              else w_q.astype(jnp.int32))
-        colsum = jnp.sum(wc, axis=-2)
-    zcol = z.astype(jnp.int32) * colsum
-    if "b" in p:
-        # bias joins the accumulator too, quantized onto the output grid
-        # s*gamma — the standard integer-inference bias treatment
-        # (gemmlowp/TFLite) and the only formulation whose rounding XLA
-        # cannot re-associate differently per backend (an fp "+ b" after
-        # the dequant multiplies gets fma-contracted next to a jnp dot but
-        # not next to a pallas call). Clipped so zcol - b_q stays well
-        # inside int32 whatever the scales are.
-        b_q = jnp.clip(jnp.round(p["b"].astype(jnp.float32) / (s * gamma)),
-                       -2.0 ** 30, 2.0 ** 30).astype(jnp.int32)
-        zcol = zcol - b_q
-
-    if name == "fused":
-        n_planes = (p["w_planes_pos"].shape[-3] if "w_planes_pos" in p
-                    else INT8_PLANES)
-        y = _matmul_fused(xf, w_q, s, z, n_lvl, gamma, zcol, n_planes,
-                          interpret, shift=shift)
-    elif name == "packed":
-        y = _matmul_packed(xf, p["w_planes_pos"], p["w_planes_neg"],
-                           s, z, n_lvl, gamma, zcol, interpret, shift=shift)
-    else:
-        # the jnp oracle materializes the codes (quant.affine_encode — the
-        # formula the kernels inline) and seals them so XLA cannot re-fuse
-        # the encode into the dot differently than the kernels would
-        q8 = jax.lax.optimization_barrier(
-            quant.affine_encode(xf, s, z, n_lvl).astype(jnp.int8))
-        # view shift: mask the dead low planes out of the codes — the jnp
-        # mirror of the kernels' plane skip (masked * gamma_R is exactly
-        # the truncated-code weight at the rung step gamma_R * 2^shift)
-        w_ref_q = (masked_codes(w_q, shift).astype(jnp.int8)
-                   if shift is not None else w_q)
-        y = _matmul_ref(q8, w_ref_q, s, gamma, zcol)
+    gamma, zcol = _gamma_zcol(p, s, z, shift)
+    y = _dispatch_rows(xf, p, s, z, n_lvl, gamma, zcol, shift,
+                       name, interpret)
     return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+def serving_conv(x: Array, p: dict, spec, backend: str) -> Array:
+    """The serving CONV projection: im2col over the serving matmuls.
+
+    ``x``: (B, H, W, Cin) fp input; ``p``: the layer's serving artifact with
+    the kernel FLAT as (kh*kw*Cin, Cout) w_q (kernels/pann_conv layout
+    contract — same leaves, plane packing, and rung views as any linear);
+    ``spec``: the static geometry (any object with kh/kw/sh/sw/ph/pw ints,
+    e.g. ``configs.base.ConvSpec``). Returns (B, Ho, Wo, Cout) in x.dtype.
+
+    One deliberate divergence from ``serving_linear``: the activation
+    scalars are derived from the PADDED INPUT tensor, not the patch rows.
+    Strided geometry may leave pixels out of every patch, so patch-derived
+    ranges could differ between geometries over the same input; deriving
+    from the input keeps the quantizer a function of the tensor alone, and
+    ``serving_conv_oracle`` consumes the identical sealed scalars so the
+    bit-exactness contract is unaffected. Padding happens in fp BEFORE the
+    encode: with include_zero ranges the border encodes to exactly z and
+    the zcol correction makes it an exact no-op (pann_conv docstring).
+    """
+    name, interpret = resolve_backend(backend, p)
+    w_q = p["w_q"]
+    assert w_q.ndim == 2 and x.ndim == 4, (w_q.shape, x.shape)
+    b = x.shape[0]
+    n_out = w_q.shape[-1]
+    # entry barrier on the padded fp input — the conv analogue of sealing
+    # the (-1, K) rows: everything backend-specific hangs off this value
+    xpad = jax.lax.optimization_barrier(
+        _pc.pad_nhwc(x.astype(jnp.float32), spec.ph, spec.pw))
+    s, z, n_lvl = _act_scalars(xpad.reshape(-1, xpad.shape[-1]), p)
+    shift = _shift_leaf(p)
+    s, z, n_lvl = jax.lax.optimization_barrier((s, z, n_lvl))
+    gamma, zcol = _gamma_zcol(p, s, z, shift)
+    patches = _pc.extract_patches(xpad, spec.kh, spec.kw, spec.sh, spec.sw)
+    ho, wo = patches.shape[1], patches.shape[2]
+    xf = patches.reshape(-1, patches.shape[-1])
+    y = _dispatch_rows(xf, p, s, z, n_lvl, gamma, zcol, shift,
+                       name, interpret)
+    return y.reshape(b, ho, wo, n_out).astype(x.dtype)
+
+
+def serving_conv_oracle(x: Array, p: dict, spec) -> Array:
+    """jnp int32 convolution oracle for ``serving_conv``: the same sealed
+    scalars and zcol row, but the integer accumulation runs through
+    ``lax.conv_general_dilated`` instead of im2col + matmul. Integer sums
+    are associative, so every backend of ``serving_conv`` must match this
+    bit-for-bit in fp32 (asserted in tests/test_encoder_serving.py) — the
+    conv counterpart of ``_matmul_ref``."""
+    w_q = p["w_q"]
+    xpad = jax.lax.optimization_barrier(
+        _pc.pad_nhwc(x.astype(jnp.float32), spec.ph, spec.pw))
+    s, z, n_lvl = _act_scalars(xpad.reshape(-1, xpad.shape[-1]), p)
+    shift = _shift_leaf(p)
+    s, z, n_lvl = jax.lax.optimization_barrier((s, z, n_lvl))
+    gamma, zcol = _gamma_zcol(p, s, z, shift)
+    q = jax.lax.optimization_barrier(
+        quant.affine_encode(xpad, s, z, n_lvl).astype(jnp.int8))
+    w_int = (masked_codes(w_q, shift) if shift is not None
+             else w_q.astype(jnp.int32))
+    y_int = _pc.conv_int32(q, w_int, spec.kh, spec.kw, spec.sh, spec.sw)
+    y = (y_int - zcol).astype(jnp.float32) * s * gamma
+    return y.astype(x.dtype)
 
 
 def cache_planes_active(n_lvl) -> Array:

@@ -1,0 +1,92 @@
+"""Bit-plane conv projections as im2col over the serving matmuls.
+
+A conv layer is served as a MATMUL: the artifact stores the kernel FLAT as
+a ``(kh*kw*Cin, Cout)`` weight — the exact shape ``models/serving`` already
+quantizes (per-output-channel gamma along the last axis, bit-plane packing
+along K, zero-copy ``plane_shift`` rung views) — and the input is expanded
+to patch rows at run time (im2col). Geometry (kernel size, stride, padding)
+is static config, never artifact data, so the one mmap-able weight store
+needs no new leaf types for conv.
+
+Why im2col is bit-exact here and not merely close (DESIGN.md §4 applies
+unchanged):
+
+  * activation codes are affine-encoded with ``include_zero`` ranges, so a
+    zero-padded fp border encodes to exactly the zero point z; the int32
+    ``zcol`` correction subtracts z * colsum(w) per output channel, which
+    makes padded positions exact no-ops — zero-padding the fp input and
+    then encoding equals encoding and then padding with code z;
+  * patch extraction is pure gather (elementwise with respect to values),
+    so it commutes with the affine encode: patches-of-codes equal
+    codes-of-patches, and the kernels' in-VMEM encode of the patch rows
+    produces the identical int8 codes;
+  * the int32 patch matmul and the int32 convolution sum the same integer
+    products — integer addition is associative, so
+    ``dot(patches(q), w_flat) == conv(q, w)`` holds bit-for-bit, which is
+    what lets ``dispatch.serving_conv_oracle`` check the Pallas backends
+    against ``lax.conv_general_dilated`` with ``assert_array_equal``.
+
+Feature order is the single layout contract: patch row index
+``(di*kw + dj)*Cin + c`` ⇔ ``w_flat.reshape(kh, kw, Cin, Cout)`` (HWIO).
+Everything in this module is plain jax — no dispatch import, so the
+kernel/dispatch layering stays acyclic (dispatch imports us).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    """Output extent of a VALID conv over a ``pad``-padded input."""
+    out = (size + 2 * pad - k) // stride + 1
+    if out < 1:
+        raise ValueError(
+            f"conv geometry yields empty output: size={size} k={k} "
+            f"stride={stride} pad={pad}")
+    return out
+
+
+def pad_nhwc(x: Array, ph: int, pw: int) -> Array:
+    """Zero-pad the spatial dims of an (B, H, W, C) input — in fp, BEFORE
+    the activation encode, so the border lands on the zero point exactly."""
+    if ph == 0 and pw == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+def extract_patches(xpad: Array, kh: int, kw: int, sh: int, sw: int
+                    ) -> Array:
+    """im2col: (B, Hp, Wp, C) → (B, Ho, Wo, kh*kw*C) patch rows.
+
+    The feature axis is ordered (di, dj, c) — row-major over the kernel
+    window, channels fastest — matching ``w_flat.reshape(kh, kw, C, N)``.
+    Implemented as kh*kw strided slices (pure gather: XLA fuses these into
+    the consumer, and values are never transformed, so extraction commutes
+    with the affine encode).
+    """
+    b, hp, wp, c = xpad.shape
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    slabs = [xpad[:, di:di + sh * (ho - 1) + 1:sh,
+                  dj:dj + sw * (wo - 1) + 1:sw, :]
+             for di in range(kh) for dj in range(kw)]
+    return jnp.concatenate(slabs, axis=-1)
+
+
+def conv_int32(q: Array, w_flat: Array, kh: int, kw: int, sh: int, sw: int
+               ) -> Array:
+    """Exact int32 VALID convolution of code tensors — the oracle's core.
+
+    ``q``: (B, Hp, Wp, Cin) integer activation codes (already padded);
+    ``w_flat``: (kh*kw*Cin, Cout) integer weight codes in the flat layout.
+    Bit-identical to ``extract_patches(q) @ w_flat`` (associative int sums).
+    """
+    c_in = q.shape[-1]
+    w4 = w_flat.astype(jnp.int32).reshape(kh, kw, c_in, -1)
+    return jax.lax.conv_general_dilated(
+        q.astype(jnp.int32), w4, window_strides=(sh, sw), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)

@@ -123,12 +123,13 @@ def main(argv=None) -> dict:
 
         calib = state.calib if qat else None
         if tree is not None:
-            variant = serving.quantize_params_for_serving(
-                state.params, cfg, policy=tree, calib=calib)
+            qspec = serving.ServingQuantSpec(policy=tree, calib=calib)
         else:
-            variant = serving.quantize_params_for_serving(
-                state.params, cfg, r=float(uniform_pt[0]),
-                act_bits=int(uniform_pt[1]), calib=calib)
+            qspec = serving.ServingQuantSpec(r=float(uniform_pt[0]),
+                                             act_bits=int(uniform_pt[1]),
+                                             calib=calib)
+        variant = serving.quantize_params_for_serving(state.params, cfg,
+                                                      spec=qspec)
 
         # the exported artifact through the SERVING forward (w_q dequant +
         # frozen static activation ranges) on the same held-out batch
@@ -167,8 +168,9 @@ def main(argv=None) -> dict:
             specs = {0: (float(uniform_pt[0]),
                          None if uniform_pt[1] is None
                          else int(uniform_pt[1]))}
-        ws = serving.build_weight_store(state.params, cfg, specs,
-                                        pack_planes=True, calib=calib)
+        ws = serving.build_weight_store(
+            state.params, cfg, specs,
+            spec=serving.ServingQuantSpec(pack_planes=True, calib=calib))
         summary["artifact_out"] = artifact.write_artifact(
             args.artifact_out, ws,
             meta={"source_ckpt": args.ckpt_dir, "step": step,

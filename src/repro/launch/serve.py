@@ -36,10 +36,11 @@ import numpy as np
 from repro import configs
 from repro.configs.base import QuantConfig
 from repro.core import costs, planner
-from repro.data.pipeline import frontend_stub
+from repro.data.pipeline import frontend_raw_stub, frontend_stub
 from repro.models import model as MD
 from repro.models import serving
-from repro.serve_engine import Request, ServeEngine
+from repro.serve_engine import (EncodeEngine, EncodeRequest, Request,
+                                ServeEngine)
 from repro.serve_engine.fleet import (Fleet, FleetConfig, TrafficSpec,
                                       make_trace)
 
@@ -105,6 +106,60 @@ def serve_fleet(args) -> dict:
         "rung_token_histogram": report["rung_token_histogram"],
         "governor_replans": len(report["governor"]["replans"]),
         "wall_s": round(dt, 3),
+    }
+    print("[serve] " + json.dumps(summary))
+    return summary
+
+
+def serve_encode(args) -> dict:
+    """The encoder path: batch-oriented item serving (no KV cache) through
+    ``serve_engine.EncodeEngine`` — same ladder, same one-weight-store
+    views, per-image/per-utterance power budgets."""
+    ladder_bits = [int(b) for b in
+                   (args.power_ladder or "2,4,6").split(",")]
+    budgets = [int(b) for b in args.budgets.split(",")] if args.budgets \
+        else ladder_bits
+    cfg = configs.get_config(args.arch, quant=QuantConfig(mode="none"))
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    engine = EncodeEngine(cfg, params, ladder_bits=ladder_bits,
+                          max_batch=args.batch,
+                          allocation=args.allocation,
+                          backend=args.backend or None)
+    engine.warmup()
+    total_macs = sum(m.macs for m in engine.profile)
+    for op in engine.ladder:
+        if op.lw is not None:
+            print(f"[serve] {op.describe()}")
+        else:
+            print(f"[serve] rung[{op.bits}b] "
+                  f"{op.plan.describe(total_macs=total_macs)}")
+
+    n = args.requests or args.batch
+    raw = frontend_raw_stub(cfg, n, 0, args.seed)
+    if raw is None:                 # no conv stem: stub embeddings
+        raw = frontend_stub(cfg, n, 0, args.seed)
+    reqs = [EncodeRequest(uid=i, item=raw[i],
+                          power_budget_bits=budgets[i % len(budgets)])
+            for i in range(n)]
+
+    t0 = time.monotonic()
+    responses = engine.encode(reqs)
+    dt = time.monotonic() - t0
+    engine.assert_no_recompile()
+
+    summary = {
+        "arch": cfg.name,
+        "mode": "encode",
+        "engine": engine.describe(),
+        "items": [{"uid": r.uid, "rung_bits": r.rung_bits,
+                   "encoded_shape": list(r.encoded.shape), **r.metadata}
+                  for r in responses],
+        "encoded": len(responses),
+        "wall_s": round(dt, 3),
+        "items_per_s": round(len(responses) / max(dt, 1e-9), 1),
     }
     print("[serve] " + json.dumps(summary))
     return summary
@@ -227,14 +282,19 @@ def main(argv=None) -> dict:
                          "(kernels/pann_attention via --backend, jnp ref "
                          "oracle otherwise). Empty = fp cache.")
     ap.add_argument("--artifact_format", default="views",
-                    choices=["views", "legacy"],
                     help="ladder materialization (DESIGN.md §11): 'views' "
-                         "quantizes once at the per-module max budget and "
-                         "serves every rung as a zero-copy view over one "
-                         "weight store (HBM flat in ladder depth; rung "
-                         "budgets snapped to powers of two); 'legacy' "
-                         "keeps the per-rung quantizer (exact budgets, "
-                         "N stores) for one release.")
+                         "(the only format) quantizes once at the "
+                         "per-module max budget and serves every rung as a "
+                         "zero-copy view over one weight store (HBM flat "
+                         "in ladder depth; rung budgets snapped to powers "
+                         "of two). The per-rung 'legacy' format was "
+                         "retired.")
+    ap.add_argument("--encode", action="store_true",
+                    help="serve the ENCODER workload (vision/speech "
+                         "frontends) instead of decode: whole-sequence "
+                         "waves through serve_engine.EncodeEngine, no KV "
+                         "cache, per-item power budgets resolved on the "
+                         "same ladder. encdec/vlm archs only.")
     ap.add_argument("--budgets", default="",
                     help="per-request power budgets (bits), cycled over the "
                          "request stream; defaults to the ladder itself")
@@ -255,6 +315,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.artifact_format == "legacy":
+        raise SystemExit(
+            "--artifact_format legacy was retired: the ladder is always "
+            "materialized as one weight store with zero-copy rung views "
+            "(DESIGN.md §11). Budget-snapping drift is bounded in closed "
+            "form by benchmarks/artifact_parity.py; drop the flag.")
+    if args.artifact_format != "views":
+        raise SystemExit(
+            f"unknown --artifact_format {args.artifact_format!r}; "
+            "the only format is 'views'")
+    if args.encode:
+        return serve_encode(args)
     if args.fleet_hosts:
         return serve_fleet(args)
     if args.power_ladder:
@@ -269,12 +341,6 @@ def main(argv=None) -> dict:
         raise SystemExit(
             "--cache_bits requires --power_ladder (the quantized KV cache "
             "rides in the serve-engine variant cache)")
-    if args.artifact_format != "views":
-        raise SystemExit(
-            "--artifact_format selects the LADDER materialization; the "
-            "single-point path has one variant either way — combine it "
-            "with --power_ladder")
-
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg)
@@ -293,8 +359,9 @@ def main(argv=None) -> dict:
                              " combine it with --quant pann (or use "
                              "--power_ladder)")
         params = serving.quantize_params_for_serving(
-            params, cfg, r=qc.r, act_bits=qc.act_bits_tilde,
-            pack_planes=args.backend.startswith("packed"))
+            params, cfg, spec=serving.ServingQuantSpec(
+                r=qc.r, act_bits=qc.act_bits_tilde,
+                pack_planes=args.backend.startswith("packed")))
         cfg = dataclasses.replace(cfg, kernel_backend=args.backend)
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core import pann as pann_core
 from repro.core import quant
 from repro.kernels import dispatch
+from repro.kernels import pann_conv as _pc
 
 Array = jax.Array
 
@@ -305,6 +306,44 @@ def apply_linear(x: Array, p: dict, qc, backend: Optional[str] = None,
         y = x @ w
         return y if b is None else y + b
     return qlinear(x, p["w"].astype(x.dtype), b, qc, path=path)
+
+
+# ---------------------------------------------------------------------------
+# Conv stem (modality frontend)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, spec) -> dict:
+    """One conv-stem layer. The kernel is stored FLAT as a
+    (kh*kw*c_in, c_out) matrix (kernels/pann_conv layout contract: feature
+    order (di, dj, c) ⇔ HWIO reshape), so the quantizers, the serving
+    artifact, and the rung-view machinery all see an ordinary linear with
+    fan-in kh*kw*c_in. Conv stems conventionally carry a bias; the serving
+    path folds it into the exact int32 zcol correction (kernels.dispatch)."""
+    scale = spec.fan_in ** -0.5
+    return {"w": jax.random.normal(key, (spec.fan_in, spec.c_out),
+                                   jnp.float32) * scale,
+            "b": jnp.zeros((spec.c_out,), jnp.float32)}
+
+
+def apply_conv(x: Array, p: dict, cfg, spec, path: str) -> Array:
+    """Conv projection through the same choke point as every linear.
+
+    x: (B, H, W, C) raw frontend input. Serving artifacts ("w_q" + a kernel
+    backend) route through ``dispatch.serving_conv`` — im2col over the fused
+    /packed integer matmuls, bit-identical to the int32 conv oracle. The
+    training / float path lowers to the *same* im2col (pad -> patches ->
+    matmul) and reuses ``apply_linear``: QAT fake-quant, calibration taps,
+    and the legacy dequant path all apply to conv exactly as to linears.
+    """
+    if "w_q" in p and cfg.kernel_backend is not None:
+        return dispatch.serving_conv(x, p, spec, cfg.kernel_backend)
+    xpad = _pc.pad_nhwc(x.astype(jnp.float32), spec.ph, spec.pw)
+    patches = _pc.extract_patches(xpad, spec.kh, spec.kw, spec.sh, spec.sw)
+    b, ho, wo, _ = patches.shape
+    flat = patches.reshape(b * ho * wo, -1).astype(x.dtype)
+    y = apply_linear(flat, p, module_quant(cfg, path),
+                     backend=None, path=path)
+    return y.reshape(b, ho, wo, spec.c_out).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -65,6 +65,13 @@ def init_params(key, cfg: ModelConfig) -> dict:
         params["encoder"] = _init_stack(ks[4], cfg, cfg.encoder_layers,
                                         role="encoder")
         params["enc_norm"] = L.init_norm(cfg.d_model, cfg.norm)
+    if cfg.conv_stem:
+        cks = jax.random.split(ks[5], len(cfg.conv_stem))
+        # dict keys (not a list) so the params walk extends the trail with
+        # "s{i}" and the serving path resolves to the per-depth "conv.s{i}"
+        # policy role (core/policy.serving_path)
+        params["conv_stem"] = {f"s{i}": L.init_conv(cks[i], spec)
+                               for i, spec in enumerate(cfg.conv_stem)}
     return params
 
 
@@ -133,6 +140,55 @@ def _run_stack(x: Array, stack: dict, cfg: ModelConfig, *, causal: bool,
     return x, aux, obs
 
 
+def apply_conv_stem(params: dict, cfg: ModelConfig, raw: Array) -> Array:
+    """Run raw frontend input through the conv stem -> token sequence.
+
+    raw: (B, H, W, C) pixels (vision) or (B, frames, 1, mels) features
+    (speech), with (H, W) == cfg.frontend_hw. Each layer is a quantized
+    conv projection (layers.apply_conv); ReLU between layers (the paper's
+    CNN activation — its nonnegative range is exactly the include_zero
+    affine encoding the serving kernels assume), none after the last.
+    Returns (B, stem_tokens, c_out_last) flattened row-major over (H, W).
+    """
+    x = raw
+    last = len(cfg.conv_stem) - 1
+    for i, spec in enumerate(cfg.conv_stem):
+        x = L.apply_conv(x, params["conv_stem"][f"s{i}"], cfg, spec,
+                         f"conv.s{i}")
+        if i < last:
+            x = jax.nn.relu(x)
+    b, h, w, c = x.shape
+    return x.reshape(b, h * w, c)
+
+
+def encode(params: dict, cfg: ModelConfig, inputs: Array) -> Array:
+    """The batch-oriented encode path (no KV cache, whole-sequence waves).
+
+    inputs: raw 4-D (B, H, W, C) frontend input when ``cfg.conv_stem`` is
+    set, else pre-embedded (B, T, d_model) stub embeddings (the pre-conv
+    behavior). Returns (B, T, d_model) encoder states:
+
+    - encdec: conv stem -> bidirectional encoder stack -> enc_norm (the
+      cross-attention source ``forward``/``init_decode_state`` consume);
+    - vlm: the conv stem alone — its transformer *is* the cross-attending
+      decoder, so the stem output is the image-token sequence.
+    """
+    dtype = _dtype(cfg)
+    if cfg.conv_stem:
+        assert inputs.ndim == 4, (
+            f"conv_stem set: encode() wants raw (B, H, W, C), got "
+            f"{inputs.shape}")
+        x = apply_conv_stem(params, cfg, inputs)
+    else:
+        x = inputs
+    x = x.astype(dtype)
+    if cfg.family == "encdec":
+        enc, _, _ = _run_stack(x, params["encoder"], cfg, causal=False,
+                               remat=False, role="encoder")
+        return L.apply_norm(enc, params["enc_norm"], cfg.norm)
+    return x
+
+
 class ForwardOut(NamedTuple):
     logits: Array
     aux_loss: Array
@@ -158,6 +214,12 @@ def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
 
     obs = CAL.unseen_like(calib) if collect else None
     cross_src = None
+    # raw 4-D frontend input runs through the conv stem first (when the
+    # config owns one); 3-D input is pre-embedded (the stub path), unchanged
+    if cfg.conv_stem and enc_inputs is not None and enc_inputs.ndim == 4:
+        enc_inputs = apply_conv_stem(params, cfg, enc_inputs)
+    if cfg.conv_stem and image_embeds is not None and image_embeds.ndim == 4:
+        image_embeds = apply_conv_stem(params, cfg, image_embeds)
     if cfg.family == "encdec":
         assert enc_inputs is not None
         enc, _, enc_obs = _run_stack(enc_inputs.astype(dtype),
@@ -238,6 +300,11 @@ def init_decode_state(params: dict, cfg: ModelConfig, batch: int,
 
     cross_kv = None
     if cfg.family in ("encdec", "vlm"):
+        if cfg.conv_stem and enc_inputs is not None and enc_inputs.ndim == 4:
+            enc_inputs = apply_conv_stem(params, cfg, enc_inputs)
+        if cfg.conv_stem and image_embeds is not None \
+                and image_embeds.ndim == 4:
+            image_embeds = apply_conv_stem(params, cfg, image_embeds)
         if cfg.family == "encdec":
             assert enc_inputs is not None
             enc, _, _ = _run_stack(enc_inputs.astype(dtype),

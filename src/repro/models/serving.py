@@ -36,11 +36,54 @@ _QUANT_PARENTS = {
     "out_proj", "wr", "wg", "decay_a", "decay_b", "lm_head",
 }
 
+
+def _is_quant_parent(node: dict, trail: tuple) -> bool:
+    """Does this pytree node hold a projection weight to quantize?
+
+    Conv-stem layers (``params["conv_stem"]["s0"]`` etc.) qualify by trail,
+    not by leaf name: their ``w`` is the FLAT (kh·kw·Cin, Cout) matrix of
+    kernels/pann_conv's layout contract, so everything below — per-Cout
+    gamma, plane packing, colsum, rung views — treats it as a linear.
+    """
+    if "w" not in node or getattr(node["w"], "ndim", 0) < 2:
+        return False
+    name = trail[-1] if trail else ""
+    return name in _QUANT_PARENTS or "conv_stem" in trail
+
 # Plane count used for ladder variant caches: int8 codes are clipped to
 # +-127 = 2^7 - 1, so 7 planes reconstruct EVERY rung's codes exactly AND
 # give every rung identical plane-leaf avals — the one-compiled-decode-step
 # invariant extends to the packed backend for free (values-only variants).
 LADDER_PLANE_COUNT = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingQuantSpec:
+    """Every serving-quantizer knob in ONE object — the single place new
+    knobs land, threaded through the engine, export, and fleet instead of
+    the historical kwarg sprawl on ``quantize_params_for_serving`` /
+    ``build_variant_cache`` / ``build_weight_store``.
+
+    ``policy`` / ``r`` + ``act_bits`` pick the operating point (a tree, or
+    one global (R, b~x)); the remaining fields mean exactly what the
+    same-named kwargs of ``quantize_params_for_serving`` document.
+    ``cache_bits`` additionally accepts a {rung key: bits} mapping when the
+    spec parameterizes a whole-ladder build. Pass as ``spec=`` to any of the
+    three builders; an explicit spec supersedes the individual kwargs.
+    """
+    policy: Optional[pol.PolicyTree] = None
+    r: Optional[float] = None
+    act_bits: Optional[int] = None
+    store_dtype: Any = jnp.int8
+    pack_planes: bool = False
+    plane_count: Optional[int] = None
+    calib: Optional[Mapping[str, Any]] = None
+    cache_bits: Any = None
+
+    def for_rung(self, cache_bits: Optional[int]) -> "ServingQuantSpec":
+        """The per-rung restriction a ladder builder hands the per-variant
+        quantizer: same knobs, this rung's resolved cache width."""
+        return dataclasses.replace(self, cache_bits=cache_bits)
 
 
 def _planes_artifact(codes, plane_count: int) -> dict:
@@ -121,7 +164,9 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
                                 pack_planes: bool = False,
                                 plane_count: Optional[int] = None,
                                 calib: Optional[Mapping[str, Any]] = None,
-                                cache_bits: Optional[int] = None) -> Any:
+                                cache_bits: Optional[int] = None,
+                                spec: Optional[ServingQuantSpec] = None
+                                ) -> Any:
     """Walk the param tree; replace {"w": W} under known projections with
     {"w_q": int codes, "w_scale": gamma}. MoE stacked experts and the
     embedding gather table stay in floating point (documented).
@@ -169,7 +214,15 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     scalars ``k_s``/``k_z``/``v_s``/``v_z`` hoisted with the identical
     ``affine_scale_zp`` op sequence the decode step would run. ``xattn``
     parents are skipped: cross-attention K/V are precomputed fp encoder
-    projections, not a decode-time cache."""
+    projections, not a decode-time cache.
+
+    ``spec`` (a ``ServingQuantSpec``) names the same knobs as one object
+    and supersedes the individual kwargs."""
+    if spec is not None:
+        policy, r, act_bits = spec.policy, spec.r, spec.act_bits
+        store_dtype, pack_planes = spec.store_dtype, spec.pack_planes
+        plane_count, calib = spec.plane_count, spec.calib
+        cache_bits = spec.cache_bits
     if policy is None:
         r = r if r is not None else cfg.quant.r
     if calib:
@@ -194,8 +247,7 @@ def quantize_params_for_serving(params: Any, cfg: ModelConfig,
     def walk(node, trail=()):
         if isinstance(node, dict):
             name = trail[-1] if trail else ""
-            if "w" in node and name in _QUANT_PARENTS \
-                    and getattr(node["w"], "ndim", 0) >= 2:
+            if _is_quant_parent(node, trail):
                 w = node["w"]
                 if policy is not None:
                     mq = policy.lookup(pol.serving_path(trail))
@@ -263,7 +315,8 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
                         pack_planes: bool = False,
                         plane_count: Optional[int] = None,
                         calib: Optional[Mapping[str, Any]] = None,
-                        cache_bits: Any = None) -> dict:
+                        cache_bits: Any = None,
+                        spec: Optional[ServingQuantSpec] = None) -> dict:
     """Materialize one int8 weight-code variant per operating point.
 
     ``r_by_rung`` maps a rung key (e.g. the unsigned-MAC bit budget) to the
@@ -293,7 +346,13 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
     the ``k_nlvl``/``v_nlvl`` DATA leaves. All-or-none across rungs (a rung
     without cache leaves would change the pytree structure); PolicyTree
     rungs may instead carry explicit cache-role overrides.
+
+    ``spec`` (a ``ServingQuantSpec``) supersedes the per-knob kwargs.
     """
+    if spec is not None:
+        store_dtype, pack_planes = spec.store_dtype, spec.pack_planes
+        plane_count, calib = spec.plane_count, spec.calib
+        cache_bits = spec.cache_bits
     if isinstance(cache_bits, Mapping):
         missing = set(r_by_rung) - set(cache_bits)
         if missing:
@@ -307,20 +366,22 @@ def build_variant_cache(params: Any, cfg: ModelConfig,
             "(e.g. serving.LADDER_PLANE_COUNT); per-rung value-exact plane "
             "counts give rungs different avals and break the one-compiled-"
             "decode-step invariant")
+    base = ServingQuantSpec(store_dtype=store_dtype,
+                            pack_planes=pack_planes,
+                            plane_count=plane_count, calib=calib)
     cache = {}
     shardings = None
-    for key, spec in r_by_rung.items():
+    for key, rung_spec in r_by_rung.items():
         cb = (cache_bits.get(key) if isinstance(cache_bits, Mapping)
               else cache_bits)
-        kw = dict(store_dtype=store_dtype, pack_planes=pack_planes,
-                  plane_count=plane_count, calib=calib,
-                  cache_bits=None if cb is None else int(cb))
-        if isinstance(spec, pol.PolicyTree):
-            v = quantize_params_for_serving(params, cfg, policy=spec, **kw)
+        rq = base.for_rung(None if cb is None else int(cb))
+        if isinstance(rung_spec, pol.PolicyTree):
+            rq = dataclasses.replace(rq, policy=rung_spec)
         else:
-            r, act_bits = spec if isinstance(spec, tuple) else (spec, None)
-            v = quantize_params_for_serving(params, cfg, r=float(r),
-                                            act_bits=act_bits, **kw)
+            r, act_bits = rung_spec if isinstance(rung_spec, tuple) \
+                else (rung_spec, None)
+            rq = dataclasses.replace(rq, r=float(r), act_bits=act_bits)
+        v = quantize_params_for_serving(params, cfg, spec=rq)
         if mesh is not None:
             if shardings is None:     # variants share avals: compute once
                 shardings = variant_shardings(v, mesh, par)
@@ -388,7 +449,9 @@ def build_weight_store(params: Any, cfg: ModelConfig,
                        store_dtype=jnp.int8,
                        pack_planes: bool = False,
                        calib: Optional[Mapping[str, Any]] = None,
-                       cache_bits: Any = None) -> WeightStore:
+                       cache_bits: Any = None,
+                       spec: Optional[ServingQuantSpec] = None
+                       ) -> WeightStore:
     """Quantize once at the per-module max budget; realize every rung of
     ``r_by_rung`` as a view over that single store (see ``WeightStore``).
 
@@ -404,7 +467,12 @@ def build_weight_store(params: Any, cfg: ModelConfig,
     rules; views then alias the store's device buffers and only their small
     per-rung leaves are placed separately — the flat-HBM property survives
     sharding.
+
+    ``spec`` (a ``ServingQuantSpec``) supersedes the per-knob kwargs.
     """
+    if spec is not None:
+        store_dtype, pack_planes = spec.store_dtype, spec.pack_planes
+        calib, cache_bits = spec.calib, spec.cache_bits
     if isinstance(cache_bits, Mapping):
         missing = set(r_by_rung) - set(cache_bits)
         if missing:
@@ -435,8 +503,7 @@ def build_weight_store(params: Any, cfg: ModelConfig,
         are the SAME object in the store and every view."""
         if isinstance(node, dict):
             name = trail[-1] if trail else ""
-            if "w" in node and name in _QUANT_PARENTS \
-                    and getattr(node["w"], "ndim", 0) >= 2:
+            if _is_quant_parent(node, trail):
                 w = node["w"]
                 points = {k: _resolve_point(r_by_rung[k], trail)
                           for k in keys}

@@ -11,10 +11,13 @@ package turns that claim into a serving runtime:
               request from a declared power budget or accuracy floor
   engine      ``ServeEngine``: one bf16 checkpoint in, ONE max-budget
               weight store with a zero-copy view per rung
-              (models/serving.build_weight_store; artifact_format="legacy"
-              keeps the per-rung variant cache), ONE jitted decode step
+              (models/serving.build_weight_store), ONE jitted decode step
               shared by every rung, per-token bit-flip accounting in every
               response
+  encoder     ``EncodeEngine``: the same ladder / weight store / no-retrace
+              invariants for ITEM-oriented encoder workloads (vision conv
+              stems, speech frontends) — whole-sequence waves, no KV cache,
+              per-image/per-utterance power budgets (docs/encoder.md)
   artifact    the mmap-able on-disk form of the weight store
               (manifest.json + weights.bin; docs/artifact.md)
   fleet       ``Fleet``: ServeEngine replicated across simulated hosts on
@@ -29,6 +32,8 @@ benchmark is ``benchmarks/serve_traversal.py`` and the fleet simulation is
 """
 from repro.serve_engine.artifact import (ArtifactError, load_artifact,
                                          write_artifact)
+from repro.serve_engine.encoder import (EncodeEngine, EncodeRequest,
+                                        EncodeResponse)
 from repro.serve_engine.engine import Lane, ServeEngine
 from repro.serve_engine.fleet import (Fleet, FleetConfig, FleetTrace,
                                       PowerGovernor, TrafficSpec,
@@ -38,6 +43,7 @@ from repro.serve_engine.scheduler import Request, Response, Scheduler
 
 __all__ = ["ServeEngine", "Lane", "OperatingPoint", "build_ladder",
            "select_rung", "Request", "Response", "Scheduler",
+           "EncodeEngine", "EncodeRequest", "EncodeResponse",
            "ArtifactError", "load_artifact", "write_artifact",
            "Fleet", "FleetConfig", "FleetTrace", "PowerGovernor",
            "TrafficSpec", "make_trace", "verify_streams"]

@@ -157,17 +157,20 @@ class ServeEngine:
         rung_specs = {op.bits: (op.tree if op.tree is not None
                                 else (op.r, op.b_x_tilde))
                       for op in self.ladder}
-        # artifact_format picks how the ladder is materialized (DESIGN.md
-        # §11): "views" (default) quantizes ONCE at the per-module max
-        # budget and realizes every rung as a zero-copy view over that one
-        # weight store — HBM independent of ladder depth, rung budgets
-        # snapped to powers of two of the top rung; "legacy" keeps the
-        # per-rung quantizer (exact planned budgets, N stores) for one
-        # release while benchmarks/artifact_parity.py tracks the gap.
-        if artifact_format not in ("views", "legacy"):
+        # The ladder is materialized as ONE weight store with zero-copy rung
+        # views: quantize ONCE at the per-module max budget, realize every
+        # rung as a view adding only small data leaves — HBM independent of
+        # ladder depth, rung budgets snapped to powers of two of the top
+        # rung (DESIGN.md §11). The per-rung "legacy" quantizer was retired
+        # (benchmarks/artifact_parity.py bounds the snapping drift in
+        # closed form; serving it cost N full stores for no exactness win).
+        if artifact_format != "views":
             raise ValueError(
-                f"artifact_format must be 'views' or 'legacy', "
-                f"got {artifact_format!r}")
+                f"artifact_format {artifact_format!r} is gone: the per-rung "
+                "'legacy' materialization was retired — 'views' (one weight "
+                "store, zero-copy rung views) is the only format. Budget "
+                "snapping drift is bounded by benchmarks/artifact_parity.py; "
+                "drop the artifact_format argument.")
         self.artifact_format = artifact_format
         if weight_store is not None:
             # serve a prebuilt store — typically artifact.load_artifact's
@@ -176,10 +179,6 @@ class ServeEngine:
             # must cover this engine's ladder; extra rungs are fine — a
             # rung-sharded fleet host serves a SUBSET of the artifact's
             # ladder (dist.sharding.rung_shard) from the same file.
-            if artifact_format != "views":
-                raise ValueError(
-                    "weight_store is the views materialization; it cannot "
-                    "be served as artifact_format='legacy'")
             missing = [b for b in rung_specs if b not in weight_store.views]
             if missing:
                 raise ValueError(
@@ -200,21 +199,15 @@ class ServeEngine:
                 mesh=mesh, par=par)
             self.weight_store = ws.store
             self.variants = ws.views
-        elif artifact_format == "views":
-            ws = serving.build_weight_store(
-                params, cfg, rung_specs, mesh=mesh, par=par,
+        else:
+            quant_spec = serving.ServingQuantSpec(
                 pack_planes=needs_planes,
                 cache_bits=self._cache_bits_by_rung or None)
+            ws = serving.build_weight_store(params, cfg, rung_specs,
+                                            mesh=mesh, par=par,
+                                            spec=quant_spec)
             self.weight_store = ws.store
             self.variants = ws.views
-        else:
-            self.weight_store = None
-            self.variants = serving.build_variant_cache(
-                params, cfg, rung_specs, mesh=mesh, par=par,
-                pack_planes=needs_planes,
-                plane_count=(serving.LADDER_PLANE_COUNT if needs_planes
-                             else None),
-                cache_bits=self._cache_bits_by_rung or None)
         # offline block autotuning (kernels/autotune): measure-and-cache the
         # best Pallas block shapes per projection BEFORE the decode step is
         # ever traced — serving_linear then reads the cache at trace time,

@@ -409,9 +409,9 @@ class Fleet:
                      for op in self.ladder}
             cb = ({op.bits: fc.cache_bits for op in self.ladder}
                   if fc.cache_bits is not None else None)
-            ws = serving.build_weight_store(
-                params, cfg, specs, pack_planes=needs_planes,
-                cache_bits=cb)
+            qspec = serving.ServingQuantSpec(pack_planes=needs_planes,
+                                             cache_bits=cb)
+            ws = serving.build_weight_store(params, cfg, specs, spec=qspec)
             afct.write_artifact(artifact_dir, ws,
                                 meta={"fleet_ladder": list(fc.ladder_bits)})
         self._load_artifact = lambda: afct.load_artifact(artifact_dir)

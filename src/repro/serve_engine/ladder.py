@@ -15,16 +15,14 @@ Two allocation modes per rung (DESIGN.md §7):
     float precision and its theory score never trails it (asserted in
     tests/test_policy_allocator.py).
 
-A rung's planned R is the EXACT Algorithm-1 point. How it is realized
-depends on the engine's ``artifact_format`` (DESIGN.md §11): under
-``"views"`` (the default) each module quantizes once at its maximal rung
-budget and this rung becomes a zero-copy view that drops low bit-planes,
-SERVING the snapped budget ``core.pann.snapped_r(r_max, shift)`` rather
-than ``plan.r`` itself (power drift < sqrt(2), equal-power score gap
-tracked by benchmarks/artifact_parity.py); under ``"legacy"`` the rung
-is materialized at exactly ``plan.r``. The OperatingPoint stays the
-planning-side truth either way — budgets, scores and scheduling all key
-off the planned point.
+A rung's planned R is the EXACT Algorithm-1 point. It is realized as a
+zero-copy view over the one weight store (DESIGN.md §11): each module
+quantizes once at its maximal rung budget and the rung's view drops low
+bit-planes, SERVING the snapped budget ``core.pann.snapped_r(r_max,
+shift)`` rather than ``plan.r`` itself (power drift < sqrt(2), equal-power
+score gap bounded in closed form by benchmarks/artifact_parity.py). The
+OperatingPoint stays the planning-side truth — budgets, scores and
+scheduling all key off the planned point.
 """
 from __future__ import annotations
 

@@ -283,18 +283,43 @@ def test_rejects_missing_manifest(tmp_path):
 # Engine integration: one store behind the ladder
 # ---------------------------------------------------------------------------
 
-def test_engine_views_default_and_legacy_escape_hatch(setup):
+def test_engine_views_only_legacy_retired(setup):
     cfg, params = setup
     eng = ServeEngine(cfg, params, ladder_bits=(2, 6), max_batch=1,
                       max_len=12)
     assert eng.artifact_format == "views"
     assert eng.weight_store is not None
-    legacy = ServeEngine(cfg, params, ladder_bits=(2, 6), max_batch=1,
-                         max_len=12, artifact_format="legacy")
-    assert legacy.weight_store is None
+    # the per-rung "legacy" materialization is retired: the name now gets
+    # a helpful error pointing at the views format + the parity bound
+    with pytest.raises(ValueError, match="retired"):
+        ServeEngine(cfg, params, ladder_bits=(2, 6), max_batch=1,
+                    max_len=12, artifact_format="legacy")
     with pytest.raises(ValueError, match="artifact_format"):
         ServeEngine(cfg, params, ladder_bits=(2, 6), max_batch=1,
                     max_len=12, artifact_format="mmap")
+
+
+def test_engine_serves_loaded_artifact_bit_identically(setup, ws, written):
+    """ROADMAP item 5 end-to-end: ``ServeEngine(weight_store=
+    load_artifact(dir))`` serves WITHOUT re-quantizing, and its decode
+    stream is bit-identical to an engine built over the in-memory store."""
+    cfg, params = setup
+    cfg_q = dataclasses.replace(cfg, quant=QuantConfig(mode="none"))
+    prompt = np.arange(5, dtype=np.int32)
+    schedule = [(2, 3), (6, 3)]
+
+    def run(store):
+        eng = ServeEngine(cfg_q, weight_store=store, ladder_bits=(2, 6),
+                          max_batch=1, max_len=16, cache_bits=4)
+        eng.warmup()
+        out = eng.decode_stream(prompt, schedule)
+        eng.assert_no_recompile()
+        return out
+
+    mem = run(ws)
+    loaded = run(load_artifact(written))
+    assert mem["tokens"] == loaded["tokens"]
+    assert mem["segments"] == loaded["segments"]
 
 
 def test_engine_views_no_recompile_mixed_weight_cache_ladder(setup):

@@ -77,7 +77,7 @@ def test_module_cost_profile_sums_to_weight_macs(arch):
     assert all(m.macs > 0 and m.fan_in >= 1 for m in profile)
     # paths stay within the canonical vocabulary (core/policy.py)
     roots = {m.path.split(".")[0] for m in profile}
-    assert roots <= {"attn", "mlp", "moe", "ssm", "rwkv", "lm_head"}
+    assert roots <= {"attn", "mlp", "moe", "ssm", "rwkv", "lm_head", "conv"}
 
 
 def test_macs_split_weight_vs_act():
